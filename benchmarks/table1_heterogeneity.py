@@ -1,0 +1,57 @@
+"""Benchmark: paper Table 1 — FedAvg under varying statistical heterogeneity.
+
+Reproduces the motivation study: #classes/client in {1, 3, 5, 10(IID)};
+reports discrepancy mean/variance, max/median accuracy, rounds to target.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.data.generators import mnist_like
+from repro.fed.engine import FedAvgTrainer, FedConfig
+from repro.models.paper_models import mclr
+
+
+def run(n_rounds: int = 20, n_clients: int = 200, dim: int = 128,
+        target: float = 0.70, seed: int = 0):
+    rows = []
+    for cpc in (1, 3, 5, 10):
+        t0 = time.time()
+        data = mnist_like(seed=seed, n_clients=n_clients,
+                          classes_per_client=cpc, total_train=12000, dim=dim)
+        cfg = FedConfig(n_rounds=n_rounds, clients_per_round=20,
+                        local_epochs=10, batch_size=10, lr=0.05, seed=seed)
+        tr = FedAvgTrainer(mclr(dim, 10), data, cfg)
+        h = tr.run()
+        accs = [r.weighted_acc for r in h.rounds]
+        discs = [r.discrepancy for r in h.rounds]
+        rows.append({
+            "classes_per_client": cpc,
+            "disc_mean": float(np.mean(discs)),
+            "disc_var": float(np.var(discs)),
+            "acc_max": float(np.max(accs)),
+            "acc_median": float(np.median(accs)),
+            "rounds_to_target": h.rounds_to_reach(target),
+            "wall_s": time.time() - t0,
+        })
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(n_rounds=8 if quick else 15,
+               n_clients=100 if quick else 150)
+    print("\n# Table 1 — FedAvg vs heterogeneity (#classes/client)")
+    print(f"{'cpc':>4} {'disc_mean':>10} {'disc_var':>10} {'acc_max':>8} "
+          f"{'acc_med':>8} {'rounds>=t':>9}")
+    for r in rows:
+        print(f"{r['classes_per_client']:>4} {r['disc_mean']:>10.3f} "
+              f"{r['disc_var']:>10.4f} {r['acc_max']:>8.3f} "
+              f"{r['acc_median']:>8.3f} {str(r['rounds_to_target']):>9}")
+    # paper claims: discrepancy variance shrinks and max acc grows with cpc
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Benchmark: paper Table 3 — framework comparison.
+
+FedAvg / FedProx / IFCA / FeSEM / FedGroup(EDC|MADC) / FedGrouProx /
+ablations (RCC, RAC) on the synthetic stand-ins for the paper's datasets.
+Reports max ("early-stopping") weighted accuracy, as in §5.1.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.fedgroup import FedGrouProxTrainer, FedGroupTrainer
+from repro.data import generators as gen
+from repro.fed.engine import FedAvgTrainer, FedConfig, FedProxTrainer
+from repro.fed.fesem import FeSEMTrainer
+from repro.fed.ifca import IFCATrainer
+from repro.models.paper_models import lstm_classifier, mclr, mlp
+
+
+def _datasets(quick: bool):
+    scale = 0.4 if quick else 0.7
+    n = lambda x: max(20, int(x * scale))
+    return {
+        "mnist_mclr": (gen.mnist_like(0, n_clients=n(200),
+                                      classes_per_client=2,
+                                      total_train=n(12000), dim=128),
+                       lambda: mclr(128, 10), 3),
+        "femnist_mlp": (gen.femnist_like(0, n_clients=n(100),
+                                         total_train=n(8000), dim=128),
+                        lambda: mlp(128, 64, 62), 5),
+        "synthetic11_mclr": (gen.synthetic(1.0, 1.0, 0, n_clients=n(100)),
+                             lambda: mclr(60, 10), 5),
+        "sent140_lstm": (gen.sent140_like(0, n_clients=n(150),
+                                          total_train=n(6000), vocab=400),
+                         lambda: lstm_classifier(400, 16, 32), 5),
+    }
+
+
+def _frameworks(m: int):
+    base = dict(clients_per_round=20, local_epochs=10, batch_size=10,
+                lr=0.05, n_groups=m, pretrain_scale=10, seed=0)
+    return {
+        "fedavg": (FedAvgTrainer, FedConfig(**base)),
+        "fedprox": (FedProxTrainer, FedConfig(**base, mu=0.01)),
+        "ifca": (IFCATrainer, FedConfig(**base)),
+        "fesem": (FeSEMTrainer, FedConfig(**base)),
+        "fg_edc": (FedGroupTrainer, FedConfig(**base)),
+        "fg_madc": (FedGroupTrainer, FedConfig(**base, measure="madc")),
+        "fgp_edc": (FedGrouProxTrainer, FedConfig(**base, mu=0.01)),
+        "fg_rcc": (FedGroupTrainer, FedConfig(**base, rcc=True)),
+        "fg_rac": (FedGroupTrainer, FedConfig(**base, rac=True)),
+    }
+
+
+def main(quick: bool = False, n_rounds: int | None = None):
+    n_rounds = n_rounds or (6 if quick else 12)
+    results = {}
+    for dname, (data, model_fn, m) in _datasets(quick).items():
+        row = {}
+        for fname, (cls, cfg) in _frameworks(m).items():
+            t0 = time.time()
+            tr = cls(model_fn(), data, cfg)
+            h = tr.run(n_rounds)
+            row[fname] = (h.max_acc, time.time() - t0, tr.comm_params)
+        results[dname] = row
+
+    print("\n# Table 3 — max weighted accuracy (early stopping)")
+    frameworks = list(_frameworks(3))
+    header = f"{'dataset':>18} " + " ".join(f"{f:>8}" for f in frameworks)
+    print(header)
+    for dname, row in results.items():
+        accs = " ".join(f"{row[f][0]:>8.3f}" for f in frameworks)
+        print(f"{dname:>18} {accs}")
+    print("\n(improvement of fg_edc over fesem, percentage points)")
+    for dname, row in results.items():
+        print(f"  {dname}: {100 * (row['fg_edc'][0] - row['fesem'][0]):+.1f}")
+    print("\n# communication (cumulative params transferred, relative to fedavg)")
+    for dname, row in results.items():
+        base = max(row['fedavg'][2], 1)
+        rel = " ".join(f"{f}={row[f][2]/base:.2f}x" for f in
+                       ("fedavg", "ifca", "fesem", "fg_edc"))
+        print(f"  {dname}: {rel}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Multi-pod dry-run walkthrough: lower ONE (arch x shape) on the production
+mesh and print its roofline row — the smallest end-to-end tour of
+deliverables (e)+(g).
+
+  PYTHONPATH=src python examples/multipod_dryrun_demo.py \
+      --arch gemma-2b --shape train_4k [--multi-pod]
+
+NOTE: must run as its own process (the dry-run claims 512 placeholder
+devices before jax initializes).
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.launch import dryrun  # noqa: E402  (sets XLA_FLAGS on import)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    rec = dryrun.run_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                         save=False)
+    if rec["status"] != "ok":
+        print(f"{rec['status']}: {rec.get('reason', rec.get('error'))}")
+        return
+
+    from benchmarks import roofline
+    row = roofline.row_for(args.arch, args.shape,
+                           mesh=rec["mesh"])
+    print("\nroofline row:")
+    for k in ("compute_s", "memory_s", "collective_s"):
+        print(f"  {k:14s} {row[k]*1e3:10.3f} ms")
+    print(f"  dominant       {row['dominant']}")
+    print(f"  useful FLOPs   {100*row['useful_ratio']:.1f}% "
+          f"(MODEL_FLOPS / analytic total)")
+    print(f"  params         {row['params_total']/1e9:.2f}B total, "
+          f"{row['params_active']/1e9:.2f}B active")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: FedGroup in ~30 lines.
+
+Cluster 100 label-skewed clients into 3 groups with the EDC measure and
+train 10 communication rounds, comparing against FedAvg.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.fedgroup import FedGroupTrainer
+from repro.data.generators import mnist_like
+from repro.fed.engine import FedAvgTrainer, FedConfig
+from repro.models.paper_models import mclr
+
+
+def main():
+    # 100 clients, each holding only 2 of 10 classes (high heterogeneity)
+    data = mnist_like(seed=0, n_clients=100, classes_per_client=2,
+                      total_train=8000, dim=64)
+    model = mclr(64, 10)
+    cfg = FedConfig(n_rounds=10, clients_per_round=20, local_epochs=10,
+                    batch_size=10, lr=0.05, n_groups=3, pretrain_scale=10)
+
+    fedavg = FedAvgTrainer(model, data, cfg)
+    fedgroup = FedGroupTrainer(model, data, cfg)
+
+    print("round |  FedAvg | FedGroup")
+    for t in range(cfg.n_rounds):
+        a = fedavg.round(t)
+        g = fedgroup.round(t)
+        print(f"{t:5d} | {a.weighted_acc:7.3f} | {g.weighted_acc:8.3f}")
+
+    print(f"\nmax accuracy: FedAvg {fedavg.history.max_acc:.3f} "
+          f"vs FedGroup {fedgroup.history.max_acc:.3f} "
+          f"(+{100*(fedgroup.history.max_acc - fedavg.history.max_acc):.1f}pp)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Substrate driver: train a reduced zoo architecture for a few hundred
+steps on CPU and decode from it — exercises the same train_step/serve_step
+the production dry-run lowers on the 16x16 mesh.
+
+  PYTHONPATH=src python examples/zoo_train.py --arch zamba2-1.2b --steps 200
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    print("=== train (smoke config, synthetic tokens) ===")
+    train.main(["--mode", "lm", "--arch", args.arch, "--smoke",
+                "--steps", str(args.steps), "--batch", "8", "--seq", "64"])
+    print("\n=== serve (batched decode) ===")
+    serve.main(["--arch", args.arch, "--smoke", "--batch", "4",
+                "--prompt-len", "16", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

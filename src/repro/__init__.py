@@ -1,0 +1,20 @@
+"""repro — FedGroup (Duan et al., 2020) as a production-grade multi-pod
+JAX/TPU framework.
+
+Subpackages:
+  core      the paper's contribution: EDC/MADC measures, randomized SVD,
+            clustering, FedGroup/FedGrouProx (Algorithms 2-3), cold starts,
+            gate-network group mixing
+  fed       federated engines (FedAvg/FedProx/IFCA/FeSEM) + mesh-parallel
+            client engine and distributed cold start
+  models    architecture zoo (10 assigned archs) + the paper's MCLR/MLP/LSTM
+  kernels   Pallas TPU kernels (edc_cosine, swa_attention, ssd_chunk)
+  sharding  PartitionSpec rules for the 16x16 / 2x16x16 production meshes
+  data      synthetic federated datasets (offline stand-ins, see DESIGN.md)
+  optim     SGD/momentum/AdamW/proximal + schedules
+  checkpoint  npz pytree I/O
+  configs   per-arch configs, input shapes, smoke variants
+  launch    mesh, dry-runs, train/serve CLIs
+"""
+
+__version__ = "1.0.0"

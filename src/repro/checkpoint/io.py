@@ -1,0 +1,48 @@
+"""Pytree checkpointing to .npz (flattened key paths), restart-safe."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_pytree(path: str, tree, metadata: dict | None = None):
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[_path_str(kp)] = np.asarray(leaf)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, __meta__=json.dumps(metadata or {}), **flat)
+
+
+def load_pytree(path: str, template):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    data = np.load(path, allow_pickle=False)
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for kp, tmpl in leaves_paths:
+        key = _path_str(kp)
+        arr = data[key]
+        if arr.shape != tmpl.shape:
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {tmpl.shape}")
+        leaves.append(jnp.asarray(arr, dtype=tmpl.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_metadata(path: str) -> dict:
+    data = np.load(path, allow_pickle=False)
+    return json.loads(str(data["__meta__"]))

@@ -1,0 +1,94 @@
+"""Assigned input shapes and ShapeDtypeStruct factories for the dry-run.
+
+The four workload shapes assigned to this paper:
+
+  train_4k     seq_len=  4,096  global_batch=256   (training)
+  prefill_32k  seq_len= 32,768  global_batch= 32   (inference prefill)
+  decode_32k   seq_len= 32,768  global_batch=128   (inference decode: ONE new
+                                                    token, KV cache of seq_len)
+  long_500k    seq_len=524,288  global_batch=  1   (long-context decode)
+
+``input_specs`` returns pure ``jax.ShapeDtypeStruct`` stand-ins: weak-type
+correct, shardable, no device allocation ever happens.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import zoo
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# Sliding window used by full-attention archs for long_500k (see DESIGN.md).
+LONG_CONTEXT_WINDOW = 8192
+
+
+def batch_specs(cfg: zoo.ArchConfig, shape: InputShape):
+    """ShapeDtypeStructs for a train/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        return {"frames": SDS((B, S, cfg.frontend_dim), jnp.dtype(cfg.dtype)),
+                "labels": SDS((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        S_txt = S - cfg.n_patches
+        return {"tokens": SDS((B, S_txt), jnp.int32),
+                "patch_embeds": SDS((B, cfg.n_patches, cfg.frontend_dim),
+                                    jnp.dtype(cfg.dtype)),
+                "labels": SDS((B, S_txt), jnp.int32)}
+    return {"tokens": SDS((B, S), jnp.int32),
+            "labels": SDS((B, S), jnp.int32)}
+
+
+def decode_specs(cfg: zoo.ArchConfig, shape: InputShape):
+    """ShapeDtypeStructs for one serve_step: tokens, positions and the cache.
+
+    For windowed attention the KV ring buffer is ``window`` slots, not
+    seq_len — that is the entire point of the sliding-window variant.
+    """
+    B = shape.global_batch
+    max_len = shape.seq_len
+    if cfg.window is not None:
+        max_len = min(max_len, cfg.window)
+    cache = jax.eval_shape(lambda: zoo.init_cache(cfg, B, max_len))
+    return {"tokens": SDS((B, 1), jnp.int32),
+            "pos": SDS((B,), jnp.int32),
+            "cache": cache}
+
+
+def supported(cfg: zoo.ArchConfig, shape: InputShape) -> tuple[bool, str]:
+    """Whether (arch, shape) is runnable, plus a reason when skipped."""
+    if shape.kind == "decode" and cfg.family == "audio":
+        return False, "encoder-only architecture has no decode step"
+    if shape.name == "long_500k":
+        eff = cfg if cfg.family in ("ssm", "hybrid") else cfg
+        if cfg.family in ("ssm", "hybrid"):
+            return True, "native sub-quadratic"
+        return True, f"sliding-window variant (window={LONG_CONTEXT_WINDOW})"
+    return True, ""
+
+
+def config_for(cfg: zoo.ArchConfig, shape: InputShape) -> zoo.ArchConfig:
+    """Shape-adjusted config: long_500k switches attention to sliding-window
+    for every arch that has attention layers."""
+    if shape.name == "long_500k" and cfg.family != "ssm":
+        return cfg.with_window(LONG_CONTEXT_WINDOW)
+    return cfg

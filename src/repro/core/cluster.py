@@ -1,0 +1,101 @@
+"""Clustering backends for the group cold start.
+
+  kmeans_pp      — K-Means++ seeding + Lloyd iterations, pure JAX (used with
+                   the EDC embedding, paper Algorithm 3 "EMD branch").
+  hierarchical   — agglomerative complete-linkage on a precomputed proximity
+                   matrix (the MADC branch). O(n³) host-side numpy: n = α·m
+                   pre-training clients only (tens), never the full fleet.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# K-Means++ (JAX)
+# ---------------------------------------------------------------------------
+
+def _pp_seed(key, X, k: int):
+    """K-Means++ seeding (Arthur & Vassilvitskii 2006)."""
+    n = X.shape[0]
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    centers0 = jnp.zeros((k, X.shape[1]), X.dtype).at[0].set(X[first])
+
+    def pick(carry, i):
+        centers, key = carry
+        d2 = jnp.min(jnp.sum(jnp.square(X[:, None, :] - centers[None]), -1)
+                     + jnp.where(jnp.arange(k)[None, :] < i, 0.0, jnp.inf),
+                     axis=1)
+        kk, key = jax.random.split(key)
+        probs = d2 / jnp.maximum(jnp.sum(d2), 1e-12)
+        idx = jax.random.categorical(kk, jnp.log(jnp.maximum(probs, 1e-30)))
+        centers = centers.at[i].set(X[idx])
+        return (centers, key), None
+
+    (centers, _), _ = jax.lax.scan(pick, (centers0, key), jnp.arange(1, k))
+    return centers
+
+
+def kmeans_pp(key, X, k: int, n_iter: int = 50):
+    """X: (n, m) -> (assignments (n,), centers (k, m))."""
+    X = X.astype(jnp.float32)
+    centers = _pp_seed(key, X, k)
+
+    def lloyd(centers, _):
+        d2 = jnp.sum(jnp.square(X[:, None, :] - centers[None]), -1)  # (n, k)
+        assign = jnp.argmin(d2, -1)
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)        # (n, k)
+        counts = jnp.sum(onehot, 0)                                  # (k,)
+        sums = onehot.T @ X                                          # (k, m)
+        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1),
+                        centers)
+        return new, None
+
+    centers, _ = jax.lax.scan(lloyd, centers, None, length=n_iter)
+    assign = jnp.argmin(jnp.sum(jnp.square(X[:, None, :] - centers[None]), -1), -1)
+    return assign, centers
+
+
+def kmeans_inertia(X, assign, centers):
+    """Within-cluster sum-of-squares (the paper's clustering validity index)."""
+    d2 = jnp.sum(jnp.square(X - centers[assign]), -1)
+    return jnp.sum(d2)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical complete-linkage (numpy, host)
+# ---------------------------------------------------------------------------
+
+def hierarchical(proximity, k: int):
+    """Agglomerative clustering with complete linkage.
+
+    proximity: (n, n) symmetric dissimilarity matrix (e.g. MADC).
+    Returns integer labels (n,) with k clusters.
+    """
+    D = np.array(proximity, dtype=np.float64, copy=True)
+    n = D.shape[0]
+    np.fill_diagonal(D, np.inf)
+    active = list(range(n))
+    members = {i: [i] for i in range(n)}
+    while len(active) > k:
+        sub = D[np.ix_(active, active)]
+        flat = np.argmin(sub)
+        ai, aj = np.unravel_index(flat, sub.shape)
+        i, j = active[ai], active[aj]
+        if j < i:
+            i, j = j, i
+        # complete linkage: distance to merged = max of distances
+        for other in active:
+            if other in (i, j):
+                continue
+            D[i, other] = D[other, i] = max(D[i, other], D[j, other])
+        members[i].extend(members.pop(j))
+        active.remove(j)
+    labels = np.zeros(n, dtype=np.int32)
+    for lbl, root in enumerate(active):
+        for idx in members[root]:
+            labels[idx] = lbl
+    return labels

@@ -1,0 +1,184 @@
+"""FedGroup / FedGrouProx — the paper's contribution (Algorithms 2 & 3).
+
+Key pieces, mapped to the paper:
+  * group cold start  (Alg. 3): pre-train α·m clients one ClientUpdate from
+    w0, flatten updates into ΔW, then either
+      - EDC branch:  V = truncatedSVD(ΔWᵀ, m); embed E = K(ΔW, Vᵀ);
+                     K-Means++ on E                     (eq. 8)
+      - MADC branch: M = K(ΔW, ΔW); MADC proximity; hierarchical complete
+                     linkage                            (eq. 7)
+  * client cold start (eq. 9): newcomer takes one pre-training update from
+    the *auxiliary global model* and joins argmin_j normalized cosine
+    dissimilarity to the group's latest update direction.
+  * training round    (Alg. 2): intra-group FedAvg/FedProx, optional
+    inter-group aggregation (η_G), global model = plain mean of groups.
+  * ablations: RCC (random cluster centres), RAC (randomly assign cold).
+
+Group membership is *static* once assigned (the paper's main efficiency
+argument vs IFCA/FeSEM, which reschedule every round).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cluster as cluster_lib
+from repro.core import measures
+from repro.fed import client as client_lib
+from repro.fed import server as server_lib
+from repro.fed.engine import FedAvgTrainer, FedConfig, History, RoundMetrics
+from repro.models.modules import flatten_updates
+
+
+class FedGroupTrainer(FedAvgTrainer):
+    framework = "fedgroup"
+
+    def __init__(self, model, data, cfg: FedConfig):
+        super().__init__(model, data, cfg)
+        self.m = cfg.n_groups
+        self.membership = np.full(data.n_clients, -1, np.int64)
+        self.group_params = [self.params for _ in range(self.m)]
+        self.group_delta = [None] * self.m          # latest Δw^(g), flattened
+        # 1-epoch pre-training solver for newcomer cold start (the paper:
+        # pre-training does not occupy a whole round)
+        self.pretrain_solver = client_lib.make_batch_solver(
+            model, epochs=1, batch_size=cfg.batch_size, lr=cfg.lr, mu=0.0,
+            max_samples=data.x_train.shape[1])
+        self.cold_started = False
+
+    # ------------------------------------------------------------------
+    # Group cold start (Algorithm 3)
+    # ------------------------------------------------------------------
+    def group_cold_start(self):
+        cfg = self.cfg
+        n_pre = min(cfg.pretrain_scale * self.m, self.data.n_clients)
+        pre_idx = self.rng.choice(self.data.n_clients, n_pre, replace=False)
+        deltas, _, _ = self._solve(self.params, pre_idx)
+        self.comm_params += 2 * len(pre_idx) * self.model_size
+        dW = jax.vmap(flatten_updates)(deltas)                 # (n_pre, d_w)
+
+        if cfg.rcc:                                            # ablation
+            labels = self.rng.integers(0, self.m, n_pre)
+            self._edc_info = None
+        elif cfg.measure == "edc":
+            self.key, sk = jax.random.split(self.key)
+            E, V = measures.edc_embed(dW, self.m, key=sk)
+            assign, centers = cluster_lib.kmeans_pp(sk, E, self.m)
+            labels = np.asarray(assign)
+            self._edc_info = {"embedding": np.asarray(E),
+                              "inertia": float(cluster_lib.kmeans_inertia(
+                                  E, assign, centers))}
+        elif cfg.measure == "madc":
+            M = measures.cosine_similarity_matrix(dW)
+            Mp = measures.madc(M)
+            labels = cluster_lib.hierarchical(np.asarray(Mp), self.m)
+            self._edc_info = None
+        else:
+            raise ValueError(cfg.measure)
+
+        self.membership[pre_idx] = labels
+        for j in range(self.m):
+            members = np.where(labels == j)[0]
+            if len(members) == 0:                              # empty group:
+                self.group_params[j] = self.params             # stays at w0
+                self.group_delta[j] = jnp.zeros_like(dW[0])
+                continue
+            mean_delta = jax.tree_util.tree_map(
+                lambda d: jnp.mean(d[jnp.asarray(members)], axis=0), deltas)
+            self.group_params[j] = server_lib.apply_delta(self.params, mean_delta)
+            self.group_delta[j] = flatten_updates(mean_delta)
+        self.cold_started = True
+        return pre_idx, labels
+
+    # ------------------------------------------------------------------
+    # Client cold start (eq. 9)
+    # ------------------------------------------------------------------
+    def client_cold_start(self, cold_idx: np.ndarray):
+        cfg = self.cfg
+        if len(cold_idx) == 0:
+            return
+        if cfg.rac:                                            # ablation
+            self.membership[cold_idx] = self.rng.integers(0, self.m,
+                                                          len(cold_idx))
+            return
+        x, y, n = self._client_batch(cold_idx)
+        self.key, sk = jax.random.split(self.key)
+        keys = jax.random.split(sk, len(cold_idx))
+        deltas, _ = self.pretrain_solver(self.params, x, y, n, keys)
+        dpre = jax.vmap(flatten_updates)(deltas)               # (c, d_w)
+        G = jnp.stack(self.group_delta)                        # (m, d_w)
+        sim = measures.cosine_similarity_matrix(dpre, G)       # (c, m)
+        dis = (-sim + 1.0) / 2.0
+        self.membership[cold_idx] = np.asarray(jnp.argmin(dis, axis=1))
+
+    # ------------------------------------------------------------------
+    # Round (Algorithm 2)
+    # ------------------------------------------------------------------
+    def round(self, t: int) -> RoundMetrics:
+        cfg = self.cfg
+        if not self.cold_started:
+            self.group_cold_start()
+
+        idx = self._select()
+        cold = idx[self.membership[idx] < 0]
+        # cold start: 1 global model down + 1 pretrain update up per newcomer
+        self.comm_params += 2 * len(cold) * self.model_size
+        self.client_cold_start(cold)
+        # per-round: 1 group model down + 1 update up per client
+        self.comm_params += 2 * len(idx) * self.model_size
+
+        tilde = list(self.group_params)
+        disc_sum, disc_n = 0.0, 0
+        for j in range(self.m):
+            members = idx[self.membership[idx] == j]
+            if len(members) == 0:                              # empty group
+                continue
+            deltas, finals, n = self._solve(self.group_params[j], members)
+            agg = server_lib.weighted_delta(deltas, n)
+            tilde[j] = server_lib.apply_delta(self.group_params[j], agg)
+            diffs = jax.vmap(lambda f: server_lib.tree_norm(
+                server_lib.tree_sub(f, tilde[j])))(finals)
+            disc_sum += float(jnp.sum(diffs))
+            disc_n += len(members)
+
+        new_group_params = server_lib.inter_group_aggregate(tilde, cfg.eta_g)
+        for j in range(self.m):
+            self.group_delta[j] = flatten_updates(server_lib.tree_sub(
+                new_group_params[j], self.group_params[j]))
+        self.group_params = new_group_params
+        # auxiliary global model: unweighted average of group models
+        self.params = server_lib.tree_mean(self.group_params)
+
+        acc = self.evaluate_groups()
+        m = RoundMetrics(t, acc, 0.0, disc_sum / max(disc_n, 1))
+        self.history.add(m)
+        return m
+
+    # ------------------------------------------------------------------
+    def evaluate_groups(self) -> float:
+        """Weighted accuracy: each group model on the test data of all
+        clients historically assigned to it (paper §5.1 metric)."""
+        total_correct, total_n = 0, 0
+        d = self.data
+        for j in range(self.m):
+            members = np.where(self.membership == j)[0]
+            if len(members) == 0:
+                continue
+            correct = self.eval_fn(self.group_params[j],
+                                   jnp.asarray(d.x_test[members]),
+                                   jnp.asarray(d.y_test[members]),
+                                   jnp.asarray(d.n_test[members]))
+            total_correct += int(np.sum(np.asarray(correct)))
+            total_n += int(d.n_test[members].sum())
+        return total_correct / max(total_n, 1)
+
+
+class FedGrouProxTrainer(FedGroupTrainer):
+    """FedGroup + FedProx local solver (the paper's FedGrouProx)."""
+    framework = "fedgrouprox"
+
+    def __init__(self, model, data, cfg: FedConfig):
+        if cfg.mu <= 0:
+            cfg = FedConfig(**{**cfg.__dict__, "mu": 0.01})
+        super().__init__(model, data, cfg)

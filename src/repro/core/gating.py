@@ -1,0 +1,73 @@
+"""Gate-weighted group-model combination — the paper's stated future work
+(§5.2: "we will explore using a gate network to combine group models").
+
+Implemented as a similarity gate: a client's pre-training update direction
+is scored against every group's latest update direction (the same eq.-9
+cosine machinery as the client cold start); the resulting softmax weights
+mix the *logits* of the m group models at evaluation time. Temperature τ
+interpolates between hard assignment (τ→0 ≡ vanilla FedGroup) and a uniform
+ensemble (τ→∞).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import measures
+
+
+def gate_weights(dpre, group_deltas, temperature: float = 0.1):
+    """dpre: (c, d_w) client pre-training updates; group_deltas: (m, d_w).
+    Returns (c, m) softmax similarity gates."""
+    sim = measures.cosine_similarity_matrix(dpre, group_deltas)    # (c, m)
+    return jax.nn.softmax(sim / jnp.maximum(temperature, 1e-6), axis=-1)
+
+
+def mixture_correct_counts(model, group_params: list, weights, x, y, n_valid):
+    """Gate-mixed evaluation: logits = Σ_j w_j · logits_j per client.
+
+    weights: (c, m); x: (c, max_n, ...); y: (c, max_n); n_valid: (c,).
+    Returns per-client correct counts (c,).
+    """
+    def per_client(w, xc, yc, nv):
+        logit_sum = 0.0
+        for j, gp in enumerate(group_params):
+            logit_sum = logit_sum + w[j] * model.apply(gp, xc)
+        pred = jnp.argmax(logit_sum, -1)
+        ok = (pred == yc) & (jnp.arange(yc.shape[0]) < nv)
+        return jnp.sum(ok)
+
+    return jax.vmap(per_client, in_axes=(0, 0, 0, 0))(weights, x, y, n_valid)
+
+
+def evaluate_gated(trainer, temperature: float = 0.1,
+                   client_idx=None) -> float:
+    """Gate-mixed weighted accuracy over (a subset of) assigned clients.
+
+    Recomputes each client's 1-epoch pre-training update against the
+    auxiliary global model (exactly the client-cold-start probe), gates the
+    m group models with it, and scores the mixture on the client test set.
+    """
+    d = trainer.data
+    if client_idx is None:
+        client_idx = np.where(trainer.membership >= 0)[0]
+    client_idx = np.asarray(client_idx)
+    if len(client_idx) == 0:
+        return 0.0
+
+    x, y, n = trainer._client_batch(client_idx)
+    trainer.key, sk = jax.random.split(trainer.key)
+    keys = jax.random.split(sk, len(client_idx))
+    deltas, _ = trainer.pretrain_solver(trainer.params, x, y, n, keys)
+    from repro.models.modules import flatten_updates
+    dpre = jax.vmap(flatten_updates)(deltas)
+    G = jnp.stack(trainer.group_delta)
+    w = gate_weights(dpre, G, temperature)
+
+    correct = mixture_correct_counts(
+        trainer.model, trainer.group_params, w,
+        jnp.asarray(d.x_test[client_idx]), jnp.asarray(d.y_test[client_idx]),
+        jnp.asarray(d.n_test[client_idx]))
+    total = d.n_test[client_idx].sum()
+    return float(np.sum(np.asarray(correct)) / max(total, 1))

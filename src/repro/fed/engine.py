@@ -1,0 +1,157 @@
+"""Round-based federated training engines: FedAvg / FedProx base trainer.
+
+The trainer keeps jnp stacks for all clients (padded) and vmaps the local
+solver over the selected-client axis — the CPU/TPU-agnostic core the other
+frameworks build on.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.federated import FederatedData
+from repro.fed import client as client_lib
+from repro.fed import server as server_lib
+from repro.models.paper_models import ModelSpec
+
+
+@dataclass
+class FedConfig:
+    n_rounds: int = 50
+    clients_per_round: int = 20          # K
+    local_epochs: int = 20               # E
+    batch_size: int = 10                 # B
+    lr: float = 0.03
+    mu: float = 0.0                      # FedProx proximal weight (0 = FedAvg)
+    seed: int = 0
+    # CFL knobs
+    n_groups: int = 3                    # m
+    pretrain_scale: int = 20             # alpha (pre-train alpha*m clients)
+    eta_g: float = 0.0                   # inter-group aggregation lr
+    measure: str = "edc"                 # edc | madc
+    rcc: bool = False                    # ablation: random cluster centers
+    rac: bool = False                    # ablation: randomly assign cold clients
+    svd_iters: int = 4
+    dropout_rate: float = 0.0            # per-round client drop probability
+                                         # (network jitter, paper §3.3)
+
+
+@dataclass
+class RoundMetrics:
+    round: int
+    weighted_acc: float
+    mean_loss: float
+    discrepancy: float
+
+
+@dataclass
+class History:
+    rounds: list = field(default_factory=list)
+
+    def add(self, m: RoundMetrics):
+        self.rounds.append(m)
+
+    @property
+    def max_acc(self) -> float:
+        return max((r.weighted_acc for r in self.rounds), default=0.0)
+
+    def rounds_to_reach(self, target: float):
+        for r in self.rounds:
+            if r.weighted_acc >= target:
+                return r.round
+        return None
+
+
+class FedAvgTrainer:
+    """FedAvg (mu=0) / FedProx (mu>0) with a consensus global model."""
+
+    framework = "fedavg"
+
+    def __init__(self, model: ModelSpec, data: FederatedData, cfg: FedConfig):
+        self.model, self.data, self.cfg = model, data, cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.key = jax.random.PRNGKey(cfg.seed)
+        self.solver = client_lib.make_batch_solver(
+            model, epochs=cfg.local_epochs, batch_size=cfg.batch_size,
+            lr=cfg.lr, mu=cfg.mu, max_samples=data.x_train.shape[1])
+        self.eval_fn = client_lib.make_eval_fn(model)
+        self.params = model.init(jax.random.PRNGKey(cfg.seed + 1))
+        self.history = History()
+        from repro.models.modules import param_count
+        self.model_size = param_count(self.params)
+        self.comm_params = 0        # cumulative parameters transferred
+
+    # -- helpers -----------------------------------------------------------
+    def _select(self):
+        idx = self.rng.choice(self.data.n_clients,
+                              min(self.cfg.clients_per_round,
+                                  self.data.n_clients), replace=False)
+        if self.cfg.dropout_rate > 0.0:
+            # stragglers drop out before completing the round (the server
+            # aggregates whoever finished within the time budget, Alg. 1)
+            alive = self.rng.random(len(idx)) >= self.cfg.dropout_rate
+            if not alive.any():
+                alive[self.rng.integers(len(idx))] = True
+            idx = idx[alive]
+        return idx
+
+    def _client_batch(self, idx):
+        d = self.data
+        return (jnp.asarray(d.x_train[idx]), jnp.asarray(d.y_train[idx]),
+                jnp.asarray(d.n_train[idx]))
+
+    def _solve(self, params, idx):
+        x, y, n = self._client_batch(idx)
+        self.key, sk = jax.random.split(self.key)
+        keys = jax.random.split(sk, len(idx))
+        deltas, finals = self.solver(params, x, y, n, keys)
+        return deltas, finals, n
+
+    def _discrepancy(self, finals, ref_params):
+        """Eq. 4: mean ||w_i - w_ref|| over the round's participants."""
+        diffs = jax.vmap(lambda f: server_lib.tree_norm(
+            server_lib.tree_sub(f, ref_params)))(finals)
+        return float(jnp.mean(diffs))
+
+    def evaluate(self, params=None, client_idx=None) -> float:
+        params = self.params if params is None else params
+        d = self.data
+        idx = np.arange(d.n_clients) if client_idx is None else np.asarray(client_idx)
+        if len(idx) == 0:
+            return 0.0
+        correct = self.eval_fn(params, jnp.asarray(d.x_test[idx]),
+                               jnp.asarray(d.y_test[idx]),
+                               jnp.asarray(d.n_test[idx]))
+        total = d.n_test[idx].sum()
+        return float(np.sum(np.asarray(correct)) / max(total, 1))
+
+    # -- main loop ---------------------------------------------------------
+    def round(self, t: int) -> RoundMetrics:
+        idx = self._select()
+        deltas, finals, n = self._solve(self.params, idx)
+        # downlink: 1 model per client; uplink: 1 update per client
+        self.comm_params += 2 * len(idx) * self.model_size
+        agg = server_lib.weighted_delta(deltas, n)
+        self.params = server_lib.apply_delta(self.params, agg)
+        disc = self._discrepancy(finals, self.params)
+        acc = self.evaluate()
+        m = RoundMetrics(t, acc, 0.0, disc)
+        self.history.add(m)
+        return m
+
+    def run(self, n_rounds=None) -> History:
+        for t in range(n_rounds or self.cfg.n_rounds):
+            self.round(t)
+        return self.history
+
+
+class FedProxTrainer(FedAvgTrainer):
+    framework = "fedprox"
+
+    def __init__(self, model, data, cfg: FedConfig):
+        if cfg.mu <= 0:
+            cfg = FedConfig(**{**cfg.__dict__, "mu": 0.01})
+        super().__init__(model, data, cfg)

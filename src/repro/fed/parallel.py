@@ -1,0 +1,180 @@
+"""Mesh-parallel FedGroup — the paper's technique as a first-class
+distributed workload (the TPU-native replacement for the per-client loop).
+
+Two jittable entry points, both lowered by the FedGroup dry-run:
+
+  parallel_round      one FedGroup communication round: K clients sharded
+                      over the mesh "data" axis, each doing E epochs of local
+                      SGD from its group's parameters, followed by per-group
+                      weighted aggregation (segment-sum + psum).
+
+  group_cold_start_distributed
+                      Algorithm 3 at production scale: the pre-training
+                      update matrix ΔW (n_pre × d_w, d_w up to hundreds of
+                      millions) is sharded over the "model" axis along d_w;
+                      randomized SVD + EDC embedding run as sharded matmuls.
+                      ``qr_impl='cholesky'`` replaces tall-skinny QR with
+                      CholeskyQR2 (Gram matrix + psum of an (k×k) block) —
+                      the beyond-paper collective optimization (§Perf).
+
+Both are pure functions of arrays, so they lower/compile under pjit with
+the shardings chosen in launch/fed_dryrun.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import flatten_updates
+
+
+# ---------------------------------------------------------------------------
+# One round, client-parallel
+# ---------------------------------------------------------------------------
+
+def make_parallel_round(model, *, epochs: int, batch_size: int, lr: float,
+                        mu: float, n_groups: int, max_samples: int):
+    """Returns round_fn(group_params_stacked, membership, X, Y, n, keys)
+      -> (new group params stacked, auxiliary global params, group deltas).
+
+    group_params_stacked: pytree with leading axis m.
+    membership: (K,) int group id per selected client.
+    X: (K, max_n, ...), Y: (K, max_n), n: (K,), keys: (K, 2) uint32.
+    """
+    max_steps = epochs * ((max_samples + batch_size - 1) // batch_size)
+
+    def local_solve(params0, x, y, n_valid, key):
+        n_valid = jnp.maximum(n_valid, 1)
+        steps = epochs * ((n_valid + batch_size - 1) // batch_size)
+
+        def loss(params, xb, yb):
+            l = model.loss(params, {"x": xb, "y": yb})
+            if mu > 0:
+                l = l + 0.5 * mu * sum(
+                    jnp.sum(jnp.square(p - p0)) for p, p0 in zip(
+                        jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(params0)))
+            return l
+
+        def body(i, carry):
+            params, key = carry
+            key, sk = jax.random.split(key)
+            idx = jax.random.randint(sk, (batch_size,), 0, n_valid)
+            g = jax.grad(loss)(params, x[idx], y[idx])
+            live = (i < steps).astype(jnp.float32)
+            return (jax.tree_util.tree_map(
+                lambda p, gg: p - lr * live * gg, params, g), key)
+
+        params, _ = jax.lax.fori_loop(0, max_steps, body, (params0, key))
+        return jax.tree_util.tree_map(lambda a, b: a - b, params, params0)
+
+    def round_fn(group_params, membership, X, Y, n, keys):
+        # each client trains from ITS group's parameters
+        my_params = jax.tree_util.tree_map(
+            lambda g: g[membership], group_params)
+        deltas = jax.vmap(local_solve)(my_params, X, Y, n, keys)
+
+        # per-group weighted aggregation (Alg. 2 intra-group FedAvg):
+        # weights n_i normalized within each group
+        onehot = jax.nn.one_hot(membership, n_groups, dtype=jnp.float32)
+        w = n.astype(jnp.float32)
+        group_tot = onehot.T @ w                         # (m,)
+        norm_w = w[:, None] * onehot / jnp.maximum(group_tot[None], 1e-9)
+
+        def agg(d):
+            flat = d.reshape(d.shape[0], -1)             # (K, p)
+            g = norm_w.T @ flat                          # (m, p)
+            return g.reshape((n_groups,) + d.shape[1:])
+
+        agg_delta = jax.tree_util.tree_map(agg, deltas)
+        occupied = (group_tot > 0).astype(jnp.float32)
+        new_groups = jax.tree_util.tree_map(
+            lambda gp, gd: gp + occupied.reshape(
+                (-1,) + (1,) * (gp.ndim - 1)) * gd,
+            group_params, agg_delta)
+        global_params = jax.tree_util.tree_map(
+            lambda g: jnp.mean(g, axis=0), new_groups)
+        return new_groups, global_params, agg_delta
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# Distributed group cold start (Algorithm 3 at scale)
+# ---------------------------------------------------------------------------
+
+def cholesky_qr2(Y):
+    """CholeskyQR2: Q from two rounds of Gram-matrix Cholesky.
+
+    For a (d, k) tall-skinny sharded-by-rows Y this needs only two (k, k)
+    all-reduces instead of a distributed Householder QR — the beyond-paper
+    collective optimization for the cold start.
+    """
+    def _cqr(A):
+        k = A.shape[1]
+        G = A.T @ A                                      # (k,k): psum if sharded
+        Lc = jnp.linalg.cholesky(G + 1e-8 * jnp.eye(k, dtype=G.dtype))
+        # Apply L^-T as a small replicated matmul (NOT solve_triangular on the
+        # tall operand — XLA cannot partition that and would all-gather A).
+        Linv = jax.scipy.linalg.solve_triangular(
+            Lc, jnp.eye(k, dtype=G.dtype), lower=True)   # (k,k) replicated
+        Q = A @ Linv.T
+        return Q, Lc.T
+    Q1, R1 = _cqr(Y)
+    Q2, R2 = _cqr(Q1)
+    return Q2, R2 @ R1
+
+
+def rsvd_sharded(dW, m: int, *, n_iter: int = 4, oversample: int = 8,
+                 key=None, qr_impl: str = "householder"):
+    """Top-m left singular directions of ΔWᵀ, d_w-sharded friendly.
+
+    dW: (n, d_w). All heavy ops are (d_w × small) matmuls; with d_w sharded
+    over "model", XLA turns the small Gram products into psums.
+    qr_impl: 'householder' (jnp.linalg.qr — baseline) or 'cholesky' (CQR2).
+    """
+    n, d = dW.shape
+    k = min(m + oversample, n)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    A = dW.astype(jnp.float32).T                         # (d, n)
+    qr = jnp.linalg.qr if qr_impl == "householder" \
+        else (lambda Y: cholesky_qr2(Y))
+    omega = jax.random.normal(key, (n, k), jnp.float32)
+    Y = A @ omega
+    Q = qr(Y)[0]
+    for _ in range(n_iter):
+        W = qr(A.T @ Q)[0]
+        Q = qr(A @ W)[0]
+    B = Q.T @ A                                          # (k, n)
+    Ub, s, _ = jnp.linalg.svd(B, full_matrices=False)
+    return (Q @ Ub)[:, :m]
+
+
+def edc_embedding_distributed(dW, m: int, *, key=None,
+                              qr_impl: str = "householder",
+                              use_kernel: bool = False):
+    """ΔW -> (E (n, m) cosine embedding, V). The group-cold-start hot path."""
+    V = rsvd_sharded(dW, m, key=key, qr_impl=qr_impl)
+    if use_kernel:
+        from repro.kernels.ops import cosine_block
+        return cosine_block(dW, V), V
+    dots = dW.astype(jnp.float32) @ V
+    rn = jnp.sqrt(jnp.sum(jnp.square(dW.astype(jnp.float32)), axis=1,
+                          keepdims=True))
+    cn = jnp.linalg.norm(V, axis=0, keepdims=True)
+    return dots / jnp.maximum(rn * cn, 1e-12), V
+
+
+def kmeans_step(E, centers):
+    """One Lloyd iteration on the embedding (jit-friendly)."""
+    d2 = jnp.sum(jnp.square(E[:, None, :] - centers[None]), -1)
+    assign = jnp.argmin(d2, -1)
+    onehot = jax.nn.one_hot(assign, centers.shape[0], dtype=jnp.float32)
+    counts = jnp.sum(onehot, 0)
+    sums = onehot.T @ E
+    new = jnp.where(counts[:, None] > 0,
+                    sums / jnp.maximum(counts[:, None], 1), centers)
+    return assign, new

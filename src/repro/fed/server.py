@@ -1,0 +1,63 @@
+"""Server-side aggregation primitives shared by every framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_delta(deltas_stacked, weights):
+    """FedAvg aggregation: sum_i (n_i/n) Δw_i over a stacked client axis.
+
+    deltas_stacked: pytree with leading client axis K; weights: (K,) raw
+    (e.g. sample counts) — normalized here.
+    """
+    w = weights.astype(jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+
+    def agg(d):
+        wb = w.reshape((-1,) + (1,) * (d.ndim - 1))
+        return jnp.sum(d * wb, axis=0)
+
+    return jax.tree_util.tree_map(agg, deltas_stacked)
+
+
+def apply_delta(params, delta, scale: float = 1.0):
+    return jax.tree_util.tree_map(lambda p, d: p + scale * d, params, delta)
+
+
+def tree_mean(trees):
+    """Plain average of a list of pytrees (the auxiliary global model)."""
+    n = len(trees)
+    return jax.tree_util.tree_map(lambda *xs: sum(xs) / n, *trees)
+
+
+def tree_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l))
+                        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def inter_group_aggregate(group_params: list, eta_g: float):
+    """Algorithm 2 lines 17-19: w_g <- w̃_g + η_G Σ_{l≠g} w̃_l / ||w̃_l||."""
+    if eta_g <= 0.0 or len(group_params) == 1:
+        return group_params
+    norms = [tree_norm(p) for p in group_params]
+    normed = [tree_scale(p, 1.0 / jnp.maximum(n, 1e-12))
+              for p, n in zip(group_params, norms)]
+    total = jax.tree_util.tree_map(lambda *xs: sum(xs), *normed)
+    out = []
+    for p, nm in zip(group_params, normed):
+        others = tree_sub(total, nm)
+        out.append(tree_add(p, tree_scale(others, eta_g)))
+    return out

@@ -1,0 +1,36 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run in ``interpret=True`` mode (the kernel
+body executes step-by-step in Python — bitwise-faithful to the TPU grid
+semantics); on a real TPU set ``REPRO_PALLAS_COMPILE=1`` to lower them
+through Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.edc_cosine import edc_cosine
+from repro.kernels.ssd_chunk import ssd_intra_chunk
+from repro.kernels.swa_attention import swa_attention
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def cosine_block(dW, V, **kw):
+    """Fused cosine-similarity block E = K(ΔW, Vᵀ) (paper eq. 8)."""
+    kw.setdefault("interpret", _INTERPRET)
+    return edc_cosine(dW, V, **kw)
+
+
+def sliding_window_attention(q, k, v, *, window=None, causal=True, **kw):
+    """Flash-style sliding-window attention forward."""
+    kw.setdefault("interpret", _INTERPRET)
+    return swa_attention(q, k, v, window=window, causal=causal, **kw)
+
+
+def ssd_chunk_block(X, A_cs, B, C, **kw):
+    """Mamba2 SSD intra-chunk block (Y_diag + chunk states)."""
+    kw.setdefault("interpret", _INTERPRET)
+    return ssd_intra_chunk(X, A_cs, B, C, **kw)

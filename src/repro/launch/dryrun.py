@@ -1,0 +1,364 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh)
+combination lowers, SPMD-partitions and compiles.
+
+MUST be the first import side-effect: the XLA_FLAGS line above runs before
+jax initializes, giving 512 placeholder host devices so the production
+meshes (16x16 and 2x16x16) can be built. Do NOT import this module from
+tests — they should see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 pairs, 1 pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Outputs one JSON per run under experiments/dryrun/ with:
+  memory_analysis (bytes/device), cost_analysis (raw HLO flops/bytes —
+  NOTE: scan bodies counted ONCE, see benchmarks/roofline.py for trip-count
+  corrected numbers), and the collective inventory parsed from the
+  partitioned HLO (op kind, shape, bytes, in-loop multiplier).
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry, shapes as shp
+from repro.launch.mesh import make_production_mesh
+from repro.models import zoo
+from repro.sharding import specs as sh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def input_specs(cfg: zoo.ArchConfig, shape: shp.InputShape):
+    """ShapeDtypeStruct stand-ins for every model input of this workload."""
+    if shape.kind in ("train", "prefill"):
+        return shp.batch_specs(cfg, shape)
+    return shp.decode_specs(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[4096,512]{1,0}' or tuple '(f32[..], ..)' -> payload bytes."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str, loop_trip_counts: dict[str, int]):
+    """Inventory of collective ops in the optimized module.
+
+    loop_trip_counts: {computation-name-substring: trip count} — collectives
+    inside while bodies execute once per iteration; the static trip counts of
+    our scans (layer count, chunk count) are supplied by the caller.
+    """
+    out = []
+    current_comp = ""
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*(?:->.*)?\{?$", line)
+        if line.startswith(("ENTRY", "%", "fused_computation")) and "{" in line and "=" not in line:
+            cm = re.search(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+            if cm:
+                current_comp = cm.group(1)
+        opm = re.search(r"=\s*(\([^=]*\)|\S+)\s+(" + "|".join(COLLECTIVES)
+                        + r")(?:-start|-done)?\(", line)
+        if opm:
+            shape_str, kind = opm.group(1), opm.group(2)
+            if "-done(" in line:       # avoid double counting start/done pairs
+                continue
+            nbytes = _shape_bytes(shape_str)
+            mult = 1
+            for key, tc in loop_trip_counts.items():
+                if key in current_comp:
+                    mult = max(mult, tc)
+            out.append({"kind": kind, "computation": current_comp,
+                        "bytes": nbytes, "loop_mult": mult,
+                        "total_bytes": nbytes * mult})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def build_step(cfg: zoo.ArchConfig, shape: shp.InputShape, mesh,
+               zero: bool = False, fsdp: bool = False,
+               cache_seq_shard: bool = False,
+               batch_over_model: bool = False, moe_2d: bool = False):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
+    key = jax.random.PRNGKey(0)
+    if shape.kind == "train":
+        state_shapes = jax.eval_shape(lambda: zoo.init_train_state(key, cfg))
+        st_specs = sh.state_specs(state_shapes, cfg, zero=zero, fsdp=fsdp,
+                                  moe_2d=moe_2d)
+        batch = input_specs(cfg, shape)
+        b_specs = sh.data_specs(batch, mesh, include_model=batch_over_model)
+        fn = jax.jit(
+            partial(zoo.train_step, cfg=cfg),
+            in_shardings=(_to_sharding(st_specs, mesh),
+                          _to_sharding(b_specs, mesh)),
+            out_shardings=(_to_sharding(st_specs, mesh), None),
+            donate_argnums=(0,),
+        )
+        return fn, (state_shapes, batch)
+
+    if shape.kind == "prefill":
+        params_shapes = jax.eval_shape(lambda: zoo.init_params(key, cfg))
+        p_specs = sh.param_specs(params_shapes, cfg,
+                                 fsdp_axis="data" if fsdp else None)
+        batch = input_specs(cfg, shape)
+        b_specs = sh.data_specs(batch, mesh)
+
+        def prefill(params, batch):
+            logits, _ = zoo.forward(params, cfg, batch)
+            return logits
+
+        fn = jax.jit(prefill,
+                     in_shardings=(_to_sharding(p_specs, mesh),
+                                   _to_sharding(b_specs, mesh)),
+                     out_shardings=None)
+        return fn, (params_shapes, batch)
+
+    # decode
+    params_shapes = jax.eval_shape(lambda: zoo.init_params(key, cfg))
+    p_specs = sh.param_specs(params_shapes, cfg,
+                             fsdp_axis="data" if fsdp else None)
+    ins = input_specs(cfg, shape)
+    c_specs = sh.cache_specs(ins["cache"], cfg, mesh,
+                             seq_shard=cache_seq_shard)
+    t_specs = sh.data_specs({"tokens": ins["tokens"], "pos": ins["pos"]}, mesh)
+
+    kv_spec = None
+    if cache_seq_shard and "k" in ins["cache"]:
+        full = c_specs["k"]                    # (L, B, S, KV, hd)
+        kv_spec = P(*tuple(full)[1:])          # per-layer, inside the scan
+
+    def decode(params, cache, tokens, pos):
+        return zoo.serve_step(params, cfg, cache, tokens, pos,
+                              kv_spec=kv_spec)
+
+    fn = jax.jit(decode,
+                 in_shardings=(_to_sharding(p_specs, mesh),
+                               _to_sharding(c_specs, mesh),
+                               _to_sharding(t_specs["tokens"], mesh),
+                               _to_sharding(t_specs["pos"], mesh)),
+                 out_shardings=(None, _to_sharding(c_specs, mesh)),
+                 donate_argnums=(1,))
+    return fn, (params_shapes, ins["cache"], ins["tokens"], ins["pos"])
+
+
+def _to_sharding(spec_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def loop_trip_counts(cfg: zoo.ArchConfig, shape: shp.InputShape):
+    """Static trip counts for collective multipliers inside while bodies."""
+    return {"while": cfg.n_layers}
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            zero: bool = False, fsdp: bool = False,
+            cache_seq_shard: bool = False, mlstm_chunkwise: bool = False,
+            xlstm_opt: bool = False, batch_over_model: bool = False,
+            moe_2d: bool = False, bf16_params: bool = False,
+            moe_grouped: bool = False, attn_chunk: int | None = None,
+            save: bool = True, verbose: bool = True):
+    base = registry.get(arch)
+    if bf16_params:
+        base = base.replace(param_dtype="bfloat16")
+    if moe_grouped:
+        base = base.replace(moe_impl="grouped")
+    if attn_chunk:
+        base = base.replace(attn_q_chunk=attn_chunk)
+    if mlstm_chunkwise:
+        base = base.replace(mlstm_impl="chunkwise")
+    if xlstm_opt:
+        base = base.replace(mlstm_impl="chunkwise", xlstm_chunk=256,
+                            xlstm_scan_units=True)
+        batch_over_model = True
+    shape = shp.SHAPES[shape_name]
+    ok, why = shp.supported(base, shape)
+    if not ok:
+        if verbose:
+            print(f"SKIP {arch} x {shape_name}: {why}")
+        return {"arch": arch, "shape": shape_name, "status": "skip",
+                "reason": why}
+    cfg = shp.config_for(base, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+
+    t0 = time.time()
+    with mesh:
+        fn, args = build_step(cfg, shape, mesh, zero=zero, fsdp=fsdp,
+                              cache_seq_shard=cache_seq_shard,
+                              batch_over_model=batch_over_model,
+                              moe_2d=moe_2d)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    mem_d = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_d[k] = int(v)
+    cost_d = {k: float(v) for k, v in (cost or {}).items()
+              if isinstance(v, (int, float)) and (
+                  k in ("flops", "bytes accessed")
+                  or k.startswith("bytes accessed"))}
+
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo, loop_trip_counts(cfg, shape))
+    coll_bytes = sum(c["total_bytes"] for c in colls)
+    by_kind = {}
+    for c in colls:
+        by_kind[c["kind"]] = by_kind.get(c["kind"], 0) + c["total_bytes"]
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "multi_pod": multi_pod, "zero": zero, "fsdp": fsdp,
+        "cache_seq_shard": cache_seq_shard,
+        "window": cfg.window,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_d,
+        "cost_analysis": cost_d,
+        "collective_bytes_total": int(coll_bytes),
+        "collective_bytes_by_kind": by_kind,
+        "n_collectives": len(colls),
+    }
+    if verbose:
+        print(f"OK {arch} x {shape_name} mesh={mesh_name} "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s")
+        print(f"   memory/device: "
+              f"args={mem_d.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+              f"temp={mem_d.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+              f"out={mem_d.get('output_size_in_bytes', 0)/2**30:.2f}GiB")
+        print(f"   HLO flops={cost_d.get('flops', 0):.3e} "
+              f"bytes={cost_d.get('bytes accessed', 0):.3e} "
+              f"collective_bytes={coll_bytes:.3e} ({len(colls)} ops)")
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{mesh_name}" + ("_zero" if zero else "") \
+              + ("_fsdp" if fsdp else "") + ("_seqshard" if cache_seq_shard else "") \
+              + ("_chunkwise" if mlstm_chunkwise else "") \
+              + ("_xlstmopt" if xlstm_opt else "") \
+              + ("_bom" if (batch_over_model and not xlstm_opt) else "") \
+              + ("_moe2d" if moe_2d else "") + ("_bf16p" if bf16_params else "") \
+              + ("_grouped" if moe_grouped else "") \
+              + (f"_qc{attn_chunk}" if attn_chunk else "")
+        with open(os.path.join(OUT_DIR, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(shp.SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--zero", action="store_true",
+                    help="shard optimizer moments over the data axis (ZeRO-1)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="also shard params over the data axis (ZeRO-3)")
+    ap.add_argument("--mlstm-chunkwise", action="store_true",
+                    dest="mlstm_chunkwise",
+                    help="chunkwise-parallel mLSTM instead of recurrent scan")
+    ap.add_argument("--xlstm-opt", action="store_true", dest="xlstm_opt",
+                    help="full optimized xLSTM: chunkwise Q=256 + unit-scan "
+                         "+ batch sharded over the idle model axis")
+    ap.add_argument("--moe-2d", action="store_true", dest="moe_2d",
+                    help="2-D expert parallelism: experts over data x model")
+    ap.add_argument("--attn-chunk", type=int, default=None, dest="attn_chunk",
+                    help="query-chunked attention block size (§Perf)")
+    ap.add_argument("--moe-grouped", action="store_true", dest="moe_grouped",
+                    help="grouped (GShard-style) dispatch: shard-local "
+                         "sort/gather + all-to-all instead of global scatter")
+    ap.add_argument("--bf16-params", action="store_true", dest="bf16_params",
+                    help="bf16 parameter storage (fp32 moments)")
+    ap.add_argument("--batch-over-model", action="store_true",
+                    dest="batch_over_model",
+                    help="shard the train batch over the model axis too "
+                         "(for archs with no tensor-parallel params)")
+    ap.add_argument("--cache-seq-shard", action="store_true",
+                    dest="cache_seq_shard",
+                    help="shard decode caches over sequence when kv-heads "
+                         "do not divide the model axis (§Perf)")
+    args = ap.parse_args(argv)
+
+    pairs = []
+    if args.all:
+        for a in registry.ARCHS:
+            for s in shp.SHAPES:
+                pairs.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        pairs = [(args.arch, args.shape)]
+
+    results = []
+    for a, s in pairs:
+        try:
+            results.append(run_one(a, s, multi_pod=args.multi_pod,
+                                   zero=args.zero, fsdp=args.fsdp,
+                                   cache_seq_shard=args.cache_seq_shard,
+                                   mlstm_chunkwise=args.mlstm_chunkwise,
+                                   xlstm_opt=args.xlstm_opt,
+                                   batch_over_model=args.batch_over_model,
+                                   moe_2d=args.moe_2d,
+                                   bf16_params=args.bf16_params,
+                                   moe_grouped=args.moe_grouped,
+                                   attn_chunk=args.attn_chunk))
+        except Exception as e:  # noqa: BLE001 — report, keep sweeping
+            print(f"FAIL {a} x {s}: {type(e).__name__}: {e}")
+            results.append({"arch": a, "shape": s, "status": "fail",
+                            "error": f"{type(e).__name__}: {e}"})
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"\n== dry-run summary: {n_ok} ok, {n_skip} skip, {n_fail} fail ==")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

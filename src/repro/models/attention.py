@@ -1,0 +1,300 @@
+"""Attention blocks: GQA/MQA/MHA with RoPE, sliding-window, decode caches, MLA.
+
+Shapes
+  x            (B, S, D)
+  q            (B, S, H, hd)
+  k/v          (B, S, KV, hd)
+  cache k/v    (B, Smax, KV, hd)   — ring buffer when windowed
+
+All masking is done with additive -inf biases so one softmax path serves
+causal / bidirectional / sliding-window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   dtype=jnp.float32, qkv_bias: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product with GQA head repetition
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k, n_heads: int):
+    """(B, S, KV, hd) -> (B, S, H, hd) by repeating each kv head."""
+    kv = k.shape[2]
+    if kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kv, axis=2)
+
+
+def sdpa(q, k, v, mask_bias, softmax_scale: float):
+    """q:(B,Sq,H,hd) k,v:(B,Sk,H,hd) mask_bias:(Sq,Sk) or (B,1,Sq,Sk)."""
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * softmax_scale
+    scores = scores + mask_bias
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def make_mask_bias(sq: int, sk: int, *, causal: bool, window: int | None,
+                   q_offset: int = 0):
+    """Additive bias (sq, sk). q position i maps to absolute i + q_offset."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence (training / prefill) attention
+# ---------------------------------------------------------------------------
+
+def attention_fwd(params, x, *, n_heads: int, n_kv: int, head_dim: int,
+                  rope_theta: float | None, causal: bool = True,
+                  window: int | None = None, positions=None):
+    B, S, D = x.shape
+    q = (x @ params["wq"].astype(x.dtype)).reshape(B, S, n_heads, head_dim)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(B, S, n_kv, head_dim)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(B, S, n_kv, head_dim)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype).reshape(n_heads, head_dim)
+        k = k + params["bk"].astype(x.dtype).reshape(n_kv, head_dim)
+        v = v + params["bv"].astype(x.dtype).reshape(n_kv, head_dim)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if rope_theta is not None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    k = _repeat_kv(k, n_heads)
+    v = _repeat_kv(v, n_heads)
+    bias = make_mask_bias(S, S, causal=causal, window=window)
+    out = sdpa(q, k, v, bias, 1.0 / head_dim ** 0.5)
+    return out.reshape(B, S, n_heads * head_dim) @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode-step attention with (optionally ring-buffer) KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int, dtype):
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+    }
+
+
+def attention_decode(params, cache, x, pos, *, n_heads: int, n_kv: int,
+                     head_dim: int, rope_theta: float | None,
+                     window: int | None = None, kv_spec=None):
+    """One-token decode. x:(B,1,D), pos:(B,) absolute position of the new token.
+
+    Cache holds ``max_len`` slots. If ``window`` is set the cache is a ring
+    buffer of size max_len (== window) indexed by pos % max_len; otherwise the
+    cache is positional (slot == pos).
+
+    kv_spec: optional PartitionSpec for the (B, Smax, KV, hd) cache. When the
+    cache is sequence-sharded (kv heads < model axis), constraining the
+    updated cache AND the head-repeated copies keeps the score einsum
+    shard-local over the sequence — only softmax stats cross chips, instead
+    of an involuntary full-cache rematerialization (see §Perf).
+    """
+    B, one, D = x.shape
+    max_len = cache["k"].shape[1]
+    q = (x @ params["wq"].astype(x.dtype)).reshape(B, 1, n_heads, head_dim)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(B, 1, n_kv, head_dim)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(B, 1, n_kv, head_dim)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype).reshape(n_heads, head_dim)
+        k = k + params["bk"].astype(x.dtype).reshape(n_kv, head_dim)
+        v = v + params["bv"].astype(x.dtype).reshape(n_kv, head_dim)
+    if rope_theta is not None:
+        q = apply_rope(q, pos[:, None], rope_theta)
+        k = apply_rope(k, pos[:, None], rope_theta)
+
+    slot = pos % max_len if window is not None else pos
+    bidx = jnp.arange(B)
+    new_k = cache["k"].at[bidx, slot].set(k[:, 0])
+    new_v = cache["v"].at[bidx, slot].set(v[:, 0])
+    if kv_spec is not None:
+        new_k = jax.lax.with_sharding_constraint(new_k, kv_spec)
+        new_v = jax.lax.with_sharding_constraint(new_v, kv_spec)
+
+    kk = _repeat_kv(new_k, n_heads)
+    vv = _repeat_kv(new_v, n_heads)
+    if kv_spec is not None:
+        kk = jax.lax.with_sharding_constraint(kk, kv_spec)
+        vv = jax.lax.with_sharding_constraint(vv, kv_spec)
+    # Validity of each cache slot relative to the current position.
+    slots = jnp.arange(max_len)[None, :]                       # (1, Smax)
+    if window is not None:
+        # slot s holds absolute position: the most recent p <= pos with
+        # p % max_len == s.  Valid iff that position > pos - window and >= 0.
+        delta = (slot[:, None] - slots) % max_len              # age of slot
+        abs_pos = pos[:, None] - delta
+        valid = (abs_pos >= 0) & (abs_pos > pos[:, None] - window)
+    else:
+        valid = slots <= pos[:, None]
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[:, None, None, :]
+    out = sdpa(q, kk, vv, bias, 1.0 / head_dim ** 0.5)
+    y = out.reshape(B, 1, n_heads * head_dim) @ params["wo"].astype(x.dtype)
+    return y, {"k": new_k, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2/V3)
+# ---------------------------------------------------------------------------
+# Low-rank joint compression of q and kv. The decode cache stores only the
+# compressed kv latent c_kv (rank r_kv) and the decoupled rope key k_pe.
+
+def init_mla(key, d_model: int, n_heads: int, *, q_rank: int, kv_rank: int,
+             qk_nope: int, qk_rope: int, v_dim: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": dense_init(ks[0], d_model, q_rank, dtype),
+        "w_uq": dense_init(ks[1], q_rank, n_heads * (qk_nope + qk_rope), dtype),
+        "w_dkv": dense_init(ks[2], d_model, kv_rank + qk_rope, dtype),
+        "w_uk": dense_init(ks[3], kv_rank, n_heads * qk_nope, dtype),
+        "w_uv": dense_init(ks[4], kv_rank, n_heads * v_dim, dtype),
+        "wo": dense_init(ks[5], n_heads * v_dim, d_model, dtype),
+        "q_norm": {"scale": jnp.ones((q_rank,), dtype)},
+        "kv_norm": {"scale": jnp.ones((kv_rank,), dtype)},
+    }
+
+
+def _mla_qkv(params, x, positions, *, n_heads, qk_nope, qk_rope, v_dim,
+             kv_rank, rope_theta):
+    from repro.models.modules import rmsnorm
+    B, S, D = x.shape
+    cq = rmsnorm(params["q_norm"], x @ params["w_dq"].astype(x.dtype))
+    q = (cq @ params["w_uq"].astype(x.dtype)).reshape(B, S, n_heads, qk_nope + qk_rope)
+    q_nope, q_pe = q[..., :qk_nope], q[..., qk_nope:]
+    q_pe = apply_rope(q_pe, positions, rope_theta)
+
+    dkv = x @ params["w_dkv"].astype(x.dtype)
+    c_kv = rmsnorm(params["kv_norm"], dkv[..., :kv_rank])
+    k_pe = apply_rope(dkv[..., kv_rank:][:, :, None, :], positions, rope_theta)
+    return q_nope, q_pe, c_kv, k_pe[:, :, 0, :]
+
+
+def mla_fwd(params, x, *, n_heads: int, qk_nope: int, qk_rope: int,
+            v_dim: int, kv_rank: int, rope_theta: float,
+            causal: bool = True, window: int | None = None, positions=None,
+            q_chunk: int | None = None):
+    """q_chunk (§Perf): when set, attention streams over query chunks with a
+    running softmax — peak scores memory S*q_chunk instead of S²."""
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_pe, c_kv, k_pe = _mla_qkv(
+        params, x, positions, n_heads=n_heads, qk_nope=qk_nope,
+        qk_rope=qk_rope, v_dim=v_dim, kv_rank=kv_rank, rope_theta=rope_theta)
+    k_nope = (c_kv @ params["w_uk"].astype(x.dtype)).reshape(B, S, n_heads, qk_nope)
+    v = (c_kv @ params["w_uv"].astype(x.dtype)).reshape(B, S, n_heads, v_dim)
+    scale = 1.0 / (qk_nope + qk_rope) ** 0.5
+
+    def block(qn, qp, q_off):
+        sq = qn.shape[1]
+        s = (jnp.einsum("bqhd,bkhd->bhqk", qn, k_nope,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bqhd,bkd->bhqk", qp, k_pe,
+                          preferred_element_type=jnp.float32)) * scale
+        s = s + make_mask_bias(sq, S, causal=causal, window=window,
+                               q_offset=q_off)
+        p = jax.nn.softmax(s, -1).astype(x.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+    if q_chunk is None or S <= q_chunk:
+        out = block(q_nope, q_pe, 0)
+    else:
+        assert S % q_chunk == 0
+        nc = S // q_chunk
+        qn_c = q_nope.reshape(B, nc, q_chunk, n_heads, qk_nope)
+        qp_c = q_pe.reshape(B, nc, q_chunk, n_heads, qk_rope)
+
+        def body(_, i):
+            o = jax.checkpoint(block)(qn_c[:, i], qp_c[:, i], i * q_chunk)
+            return None, o
+        _, outs = jax.lax.scan(body, None, jnp.arange(nc))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, S, n_heads, v_dim)
+    return out.reshape(B, S, n_heads * v_dim) @ params["wo"].astype(x.dtype)
+
+
+def init_mla_cache(batch: int, max_len: int, kv_rank: int, qk_rope: int, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, max_len, kv_rank), dtype),
+        "k_pe": jnp.zeros((batch, max_len, qk_rope), dtype),
+    }
+
+
+def mla_decode(params, cache, x, pos, *, n_heads: int, qk_nope: int,
+               qk_rope: int, v_dim: int, kv_rank: int, rope_theta: float,
+               window: int | None = None):
+    """Absorbed-matrix MLA decode: attend in the compressed latent space.
+
+    score(t) = q_nopeᵀ W_uk c_kv[t] + q_peᵀ k_pe[t]
+             = (W_ukᵀ q_nope)ᵀ c_kv[t] + ...
+    so the cache never needs expansion to per-head keys (DeepSeek-V3 §2.1).
+    """
+    B, one, D = x.shape
+    max_len = cache["c_kv"].shape[1]
+    q_nope, q_pe, c_kv_new, k_pe_new = _mla_qkv(
+        params, x, pos[:, None], n_heads=n_heads, qk_nope=qk_nope,
+        qk_rope=qk_rope, v_dim=v_dim, kv_rank=kv_rank, rope_theta=rope_theta)
+
+    slot = pos % max_len if window is not None else pos
+    bidx = jnp.arange(B)
+    c_kv = cache["c_kv"].at[bidx, slot].set(c_kv_new[:, 0])
+    k_pe = cache["k_pe"].at[bidx, slot].set(k_pe_new[:, 0])
+
+    # absorb W_uk into the query:  q_lat (B,1,H,r_kv)
+    w_uk = params["w_uk"].astype(x.dtype).reshape(kv_rank, n_heads, qk_nope)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+    scale = 1.0 / (qk_nope + qk_rope) ** 0.5
+    scores = (jnp.einsum("bqhr,bkr->bhqk", q_lat, c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bqhd,bkd->bhqk", q_pe, k_pe,
+                           preferred_element_type=jnp.float32)) * scale
+
+    slots = jnp.arange(max_len)[None, :]
+    if window is not None:
+        delta = (slot[:, None] - slots) % max_len
+        abs_pos = pos[:, None] - delta
+        valid = (abs_pos >= 0) & (abs_pos > pos[:, None] - window)
+    else:
+        valid = slots <= pos[:, None]
+    scores = scores + jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+    probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+    # out latent (B,1,H,r_kv) -> expand through W_uv
+    out_lat = jnp.einsum("bhqk,bkr->bqhr", probs, c_kv)
+    w_uv = params["w_uv"].astype(x.dtype).reshape(kv_rank, n_heads, v_dim)
+    out = jnp.einsum("bqhr,rhd->bqhd", out_lat, w_uv)
+    y = out.reshape(B, 1, n_heads * v_dim) @ params["wo"].astype(x.dtype)
+    return y, {"c_kv": c_kv, "k_pe": k_pe}

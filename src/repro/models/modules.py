@@ -1,0 +1,174 @@
+"""Functional neural-net building blocks (no flax — plain pytrees of arrays).
+
+Every layer is a pair of functions:
+  init_*(key, ...) -> params (nested dict of jnp arrays)
+  *_apply(params, x, ...) -> y
+
+Parameters are stored in whatever dtype ``param_dtype`` requests; compute is
+performed in ``dtype`` (activations). This mirrors common mixed-precision
+TPU practice (bf16 activations, fp32 or bf16 params).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32, scale: float | None = None):
+    """Lecun-normal style init for a (in_dim, out_dim) kernel."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+def zeros_init(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": ones_init((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32):
+    return {"scale": ones_init((dim,), dtype), "bias": zeros_init((dim,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":  # squared ReLU (Nemotron-4)
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "relu":
+        return jax.nn.relu
+    if name == "geglu_gelu":  # gate activation for GeGLU (gemma)
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Gated / plain MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[1], d_ff, d_model, dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(params, x, act: str):
+    """Gated (SwiGLU/GeGLU) if 'w_gate' present, else plain act(xW)W."""
+    a = act_fn(act)
+    up = x @ params["w_up"].astype(x.dtype)
+    if "w_gate" in params:
+        gate = a(x @ params["w_gate"].astype(x.dtype))
+        h = gate * up
+    else:
+        h = a(up)
+    return h @ params["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)          # (half,)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]                    # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers
+# ---------------------------------------------------------------------------
+
+def tree_stack(trees: Sequence):
+    """Stack a list of identically-structured pytrees along new axis 0."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def param_count(params) -> int:
+    return int(sum(p.size for p in jax.tree_util.tree_leaves(params)))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda p: p.astype(dtype) if jnp.issubdtype(p.dtype, jnp.floating) else p, tree)
+
+
+def flatten_updates(tree) -> jnp.ndarray:
+    """Flatten a pytree of arrays into a single 1-D vector (paper's Δw)."""
+    leaves = [jnp.ravel(l) for l in jax.tree_util.tree_leaves(tree)
+              if jnp.issubdtype(l.dtype, jnp.floating)]
+    return jnp.concatenate(leaves) if leaves else jnp.zeros((0,))
+
+
+def unflatten_like(vec, tree):
+    """Inverse of flatten_updates given a template pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out, off = [], 0
+    for l in leaves:
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            out.append(vec[off:off + l.size].reshape(l.shape).astype(l.dtype))
+            off += l.size
+        else:
+            out.append(l)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,201 @@
+"""Mixture-of-Experts layer with sort-based capacity dispatch.
+
+Design (TPU-native, expert-parallel friendly):
+  * top-k router with softmax gates (optionally normalized over top-k).
+  * dispatch by sorting flattened token-expert assignments by expert id and
+    scattering into a dense (E, C, D) buffer (capacity C); tokens beyond an
+    expert's capacity are dropped (their combine weight is zero) — the classic
+    Switch/GShard capacity discipline, which keeps every shape static for XLA.
+  * expert compute is one batched einsum over the expert axis — when experts
+    are sharded over the "model" mesh axis, XLA inserts the all-to-all
+    (dispatch) and all-to-all (combine) automatically from the shardings.
+  * aux losses: Switch load-balance loss + router z-loss.
+
+FLOPs are proportional to E·C·D·F with C ≈ tokens·top_k/E · capacity_factor,
+i.e. only *active* expert compute — no dense all-experts waste.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import dense_init, act_fn
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jnp.ndarray
+    router_z_loss: jnp.ndarray
+    expert_load: jnp.ndarray          # fraction of tokens routed per expert
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int,
+             n_shared: int = 0, shared_d_ff: int | None = None,
+             gated: bool = True, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    scale = 1.0 / (d_model ** 0.5)
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts, jnp.float32, scale=0.02),
+        "w_up": (jax.random.normal(ks[1], (n_experts, d_model, d_ff)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[2], (n_experts, d_ff, d_model)) * (1.0 / d_ff ** 0.5)).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(ks[3], (n_experts, d_model, d_ff)) * scale).astype(dtype)
+    if n_shared > 0:
+        sdff = shared_d_ff or d_ff
+        p["shared"] = {
+            "w_up": dense_init(ks[4], d_model, n_shared * sdff, dtype),
+            "w_gate": dense_init(ks[5], d_model, n_shared * sdff, dtype),
+            "w_down": dense_init(jax.random.fold_in(ks[4], 7), n_shared * sdff, d_model, dtype),
+        }
+    return p
+
+
+def moe_apply(params, x, *, top_k: int, capacity_factor: float = 1.25,
+              act: str = "silu", normalize_gates: bool = True):
+    """x: (B, S, D) -> (y, MoEAux)."""
+    B, S, D = x.shape
+    E = params["router"].shape[1]
+    N = B * S
+    xt = x.reshape(N, D)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])            # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)             # (N, k)
+    if normalize_gates:
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    capacity = max(1, int(round(N * top_k / E * capacity_factor)))
+    # round capacity up to a lane-friendly multiple of 8
+    capacity = (capacity + 7) // 8 * 8
+
+    # ---- dispatch bookkeeping: position of each (token, slot) within expert
+    flat_e = expert_ids.reshape(-1)                                 # (N*k,)
+    # rank of each assignment within its expert, computed via one-hot cumsum
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)             # (N*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot                  # (N*k, E)
+    rank = jnp.sum(pos_in_e, axis=-1) - 1                           # (N*k,)
+    keep = rank < capacity
+    safe_rank = jnp.where(keep, rank, capacity - 1)
+
+    # scatter tokens into (E, C, D)
+    buf = jnp.zeros((E, capacity, D), xt.dtype)
+    tok_idx = jnp.repeat(jnp.arange(N), top_k)
+    src = jnp.where(keep[:, None], xt[tok_idx], 0)
+    buf = buf.at[flat_e, safe_rank].add(src)
+
+    # ---- expert compute (batched over E; shard E over mesh "model")
+    a = act_fn(act)
+    up = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(xt.dtype))
+    if "w_gate" in params:
+        g = a(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(xt.dtype)))
+        h = g * up
+    else:
+        h = a(up)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(xt.dtype))
+
+    # ---- combine back with gate weights
+    gathered = out_buf[flat_e, safe_rank]                           # (N*k, D)
+    w = (gate_vals.reshape(-1) * keep).astype(xt.dtype)
+    y = jnp.zeros((N, D), xt.dtype).at[tok_idx].add(gathered * w[:, None])
+
+    # ---- shared expert(s), always-on (DeepSeek-style)
+    if "shared" in params:
+        sh = params["shared"]
+        g = a(xt @ sh["w_gate"].astype(xt.dtype))
+        y = y + (g * (xt @ sh["w_up"].astype(xt.dtype))) @ sh["w_down"].astype(xt.dtype)
+
+    # ---- aux losses
+    me = jnp.mean(probs, axis=0)                                    # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32), axis=0)
+    load_balance = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    load = jnp.sum(jax.nn.one_hot(flat_e, E, dtype=jnp.float32), axis=0) / (N * top_k)
+    return y.reshape(B, S, D), MoEAux(load_balance, z_loss, load)
+
+
+# ---------------------------------------------------------------------------
+# Grouped (GShard-style) dispatch — the SPMD-friendly production path (§Perf)
+# ---------------------------------------------------------------------------
+# The scatter-based path above uses gathers whose indices span the sharded
+# token axis, which forces XLA to replicate (N·k, D) token copies. Here every
+# sort/gather is BATCHED over a group axis G (= the batch dim, sharded over
+# "data"), so all index ops stay shard-local, and the (G,E,C,D)->(E,G,C,D)
+# transpose before expert compute lowers to the canonical MoE all-to-all.
+
+def moe_apply_grouped(params, x, *, top_k: int, capacity_factor: float = 1.25,
+                      act: str = "silu", normalize_gates: bool = True):
+    """x: (B, S, D) -> (y, MoEAux). Groups = batch rows."""
+    B, S, D = x.shape
+    E = params["router"].shape[1]
+    G, T = B, S
+    xt = x                                                           # (G,T,D)
+
+    logits = xt.astype(jnp.float32) @ params["router"]               # (G,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)              # (G,T,k)
+    if normalize_gates:
+        gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    TK = T * top_k
+    capacity = max(1, int(round(T * top_k / E * capacity_factor)))
+    capacity = (capacity + 7) // 8 * 8
+    C = capacity
+
+    flat_e = expert_ids.reshape(G, TK)
+    tok_of_slot = jnp.broadcast_to(jnp.arange(TK) // top_k, (G, TK))
+    order = jnp.argsort(flat_e, axis=1, stable=True)                 # (G,TK)
+    sorted_e = jnp.take_along_axis(flat_e, order, 1)
+    sorted_tok = jnp.take_along_axis(tok_of_slot, order, 1)
+
+    counts = jnp.sum(jax.nn.one_hot(flat_e, E, dtype=jnp.int32), axis=1)
+    starts = jnp.cumsum(counts, axis=1) - counts                     # (G,E)
+    rank_sorted = (jnp.arange(TK)[None, :]
+                   - jnp.take_along_axis(starts, sorted_e, 1))       # (G,TK)
+    keep_sorted = rank_sorted < C
+
+    # (G,E,C): which sorted slot fills buffer cell (e, c)
+    src_slot = starts[:, :, None] + jnp.arange(C)[None, None, :]
+    cell_valid = jnp.arange(C)[None, None, :] < jnp.minimum(counts, C)[:, :, None]
+    slot_idx = jnp.clip(src_slot, 0, TK - 1).reshape(G, E * C)
+    tok_for_buf = jnp.take_along_axis(sorted_tok, slot_idx, 1)       # (G,E*C)
+    buf = jnp.take_along_axis(xt, tok_for_buf[..., None], axis=1)    # (G,E*C,D)
+    buf = buf * cell_valid.reshape(G, E * C, 1).astype(buf.dtype)
+    buf = buf.reshape(G, E, C, D)
+
+    # ---- expert compute sharded over E: the transpose IS the all-to-all
+    ebuf = buf.transpose(1, 0, 2, 3).reshape(E, G * C, D)
+    a = act_fn(act)
+    up = jnp.einsum("ecd,edf->ecf", ebuf, params["w_up"].astype(ebuf.dtype))
+    if "w_gate" in params:
+        g = a(jnp.einsum("ecd,edf->ecf", ebuf, params["w_gate"].astype(ebuf.dtype)))
+        h = g * up
+    else:
+        h = a(up)
+    out_e = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(ebuf.dtype))
+    out_buf = out_e.reshape(E, G, C, D).transpose(1, 0, 2, 3)        # all-to-all back
+    out_flat = out_buf.reshape(G, E * C, D)
+
+    # ---- combine: sorted slots read their buffer cell, then unsort
+    dest = sorted_e * C + jnp.clip(rank_sorted, 0, C - 1)            # (G,TK)
+    vals_sorted = jnp.take_along_axis(out_flat, dest[..., None], axis=1)
+    vals_sorted = vals_sorted * keep_sorted[..., None].astype(vals_sorted.dtype)
+    inv = jnp.argsort(order, axis=1, stable=True)
+    vals = jnp.take_along_axis(vals_sorted, inv[..., None], axis=1)  # (G,TK,D)
+    w = gate_vals.reshape(G, T, top_k).astype(vals.dtype)
+    y = jnp.sum(vals.reshape(G, T, top_k, D) * w[..., None], axis=2)
+
+    if "shared" in params:
+        sh = params["shared"]
+        gsh = a(x @ sh["w_gate"].astype(x.dtype))
+        y = y + (gsh * (x @ sh["w_up"].astype(x.dtype))) @ sh["w_down"].astype(x.dtype)
+
+    me = jnp.mean(probs.reshape(-1, E), axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[..., 0].reshape(-1), E,
+                                 dtype=jnp.float32), axis=0)
+    load_balance = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    load = jnp.sum(jax.nn.one_hot(flat_e.reshape(-1), E, dtype=jnp.float32),
+                   axis=0) / (G * TK)
+    return y, MoEAux(load_balance, z_loss, load)

@@ -1,0 +1,108 @@
+"""The paper's own experiment models: MCLR, MLP, LSTM sentiment classifier.
+
+Table 2 of the paper:
+  MNIST    MCLR (d_w=7,850)     MLP-128 (d_w=101,770)
+  FEMNIST  MCLR (d_w=20,410)    MLP-512 (d_w=415,258)
+  Synthetic(1,1) MCLR (d_w=610)
+  Sent140  LSTM (d_w=243,861)
+
+These run inside the federated engine (fed/), each exposing
+  init(key) -> params
+  apply(params, x) -> logits
+  loss(params, batch) -> scalar
+  accuracy(params, batch) -> scalar
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    init: Callable
+    apply: Callable
+
+    def loss(self, params, batch):
+        logits = self.apply(params, batch["x"])
+        labels = batch["y"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], -1))
+
+    def accuracy(self, params, batch):
+        logits = self.apply(params, batch["x"])
+        return jnp.mean(jnp.argmax(logits, -1) == batch["y"])
+
+    def correct_count(self, params, batch):
+        logits = self.apply(params, batch["x"])
+        return jnp.sum(jnp.argmax(logits, -1) == batch["y"])
+
+
+# ---------------------------------------------------------------------------
+
+def mclr(in_dim: int, n_classes: int) -> ModelSpec:
+    """Multinomial logistic regression (convex)."""
+    def init(key):
+        return {"w": jnp.zeros((in_dim, n_classes)),
+                "b": jnp.zeros((n_classes,))}
+
+    def apply(params, x):
+        return x @ params["w"] + params["b"]
+
+    return ModelSpec(f"mclr_{in_dim}x{n_classes}", init, apply)
+
+
+def mlp(in_dim: int, hidden: int, n_classes: int) -> ModelSpec:
+    """One-hidden-layer perceptron (the paper's MLP-128 / MLP-512)."""
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        s1 = (2.0 / in_dim) ** 0.5
+        s2 = (2.0 / hidden) ** 0.5
+        return {"w1": jax.random.normal(k1, (in_dim, hidden)) * s1,
+                "b1": jnp.zeros((hidden,)),
+                "w2": jax.random.normal(k2, (hidden, n_classes)) * s2,
+                "b2": jnp.zeros((n_classes,))}
+
+    def apply(params, x):
+        h = jax.nn.relu(x @ params["w1"] + params["b1"])
+        return h @ params["w2"] + params["b2"]
+
+    return ModelSpec(f"mlp_{in_dim}x{hidden}x{n_classes}", init, apply)
+
+
+def lstm_classifier(vocab: int, embed: int, hidden: int,
+                    n_classes: int = 2) -> ModelSpec:
+    """LSTM sequence classifier (the paper's Sent140 model)."""
+    def init(key):
+        ks = jax.random.split(key, 4)
+        s = (1.0 / hidden) ** 0.5
+        return {
+            "emb": jax.random.normal(ks[0], (vocab, embed)) * 0.1,
+            "wx": jax.random.normal(ks[1], (embed, 4 * hidden)) * (1.0 / embed) ** 0.5,
+            "wh": jax.random.normal(ks[2], (hidden, 4 * hidden)) * s,
+            "b": jnp.zeros((4 * hidden,)),
+            "w_out": jax.random.normal(ks[3], (hidden, n_classes)) * s,
+            "b_out": jnp.zeros((n_classes,)),
+        }
+
+    def apply(params, x):          # x: (B, T) tokens (stored as float in the
+        B, T = x.shape             # padded federated container)
+        e = params["emb"][x.astype(jnp.int32)]     # (B, T, E)
+
+        def cell(carry, e_t):
+            h, c = carry
+            z = e_t @ params["wx"] + h @ params["wh"] + params["b"]
+            i, f, g, o = jnp.split(z, 4, -1)
+            c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), None
+
+        h0 = jnp.zeros((B, params["wh"].shape[0]))
+        (h, _), _ = jax.lax.scan(cell, (h0, h0), e.transpose(1, 0, 2))
+        return h @ params["w_out"] + params["b_out"]
+
+    return ModelSpec(f"lstm_{vocab}x{embed}x{hidden}", init, apply)

@@ -1,0 +1,247 @@
+"""Mamba2 (SSD — state-space duality) block, TPU-adapted.
+
+Training/prefill uses the *chunked* SSD algorithm (Dao & Gu 2024, listing 1):
+intra-chunk quadratic term (MXU-friendly batched matmuls) + an inter-chunk
+state recurrence over only seq_len/chunk steps. This is the TPU-native
+adaptation of the CUDA selective-scan: instead of a warp-level scan we block
+the sequence so >95% of FLOPs are dense matmuls, and the sequential part
+carries only the (B, H, P, N) boundary states.
+
+Sharding note: the input projection is stored as SEPARATE kernels per
+segment (z / x / B / C / dt) rather than one fused matmul, so the d_inner
+segments can be cleanly tensor-parallel over the mesh "model" axis while the
+small B/C/dt segments stay replicated (see sharding/specs.py).
+
+Decode is the O(1) recurrent update on the carried state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import dense_init, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, d_model: int, *, d_state: int = 64, expand: int = 2,
+                head_dim: int = 64, conv_width: int = 4, n_groups: int = 1,
+                dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    gn = n_groups * d_state
+    ks = jax.random.split(key, 8)
+    # dt bias initialised so softplus(dt_bias) spans [1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(ks[6], (n_heads,))
+                 * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    cw = lambda k, ch: (jax.random.normal(k, (conv_width, ch))
+                        * (1.0 / conv_width ** 0.5)).astype(dtype)
+    return {
+        "wz": dense_init(ks[0], d_model, d_inner, dtype),
+        "wx": dense_init(ks[1], d_model, d_inner, dtype),
+        "wB": dense_init(ks[2], d_model, gn, dtype),
+        "wC": dense_init(ks[3], d_model, gn, dtype),
+        "wdt": dense_init(ks[4], d_model, n_heads, dtype),
+        "conv_x": cw(ks[5], d_inner),
+        "conv_x_b": jnp.zeros((d_inner,), dtype),
+        "conv_B": cw(jax.random.fold_in(ks[5], 1), gn),
+        "conv_B_b": jnp.zeros((gn,), dtype),
+        "conv_C": cw(jax.random.fold_in(ks[5], 2), gn),
+        "conv_C_b": jnp.zeros((gn,), dtype),
+        "A_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": {"scale": jnp.ones((d_inner,), dtype)},
+        "out_proj": dense_init(ks[7], d_inner, d_model, dtype),
+    }
+
+
+def mamba2_dims(d_model: int, d_state: int, expand: int, head_dim: int,
+                n_groups: int = 1):
+    d_inner = expand * d_model
+    return dict(d_inner=d_inner, n_heads=d_inner // head_dim,
+                head_dim=head_dim, d_state=d_state, n_groups=n_groups)
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD
+# ---------------------------------------------------------------------------
+
+def _segsum(x):
+    """x: (..., T) -> (..., T, T) lower-triangular segment sums (else -inf)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, d, NEG_INF)
+
+
+def ssd_chunked(X, dtA, B, C, chunk: int, init_state=None):
+    """SSD over the full sequence.
+
+    X   (b, l, h, p)   dt-scaled inputs
+    dtA (b, l, h)      log decay per step (dt * A, A < 0)
+    B,C (b, l, h, n)   input/output projections (already head-expanded)
+    Returns (Y (b,l,h,p), final_state (b,h,p,n)).
+    """
+    b, l, h, p = X.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    c = l // chunk
+    Xc = X.reshape(b, c, chunk, h, p)
+    Bc = B.reshape(b, c, chunk, h, n)
+    Cc = C.reshape(b, c, chunk, h, n)
+    A = dtA.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)       # (b,h,c,Q)
+    A_cs = jnp.cumsum(A, axis=-1)                               # (b,h,c,Q)
+
+    # 1) intra-chunk (diagonal blocks): quadratic attention-like term
+    L = jnp.exp(_segsum(A))                                     # (b,h,c,Q,Q)
+    Y_diag = jnp.einsum("bcqhn,bckhn,bhcqk,bckhp->bcqhp", Cc, Bc, L, Xc)
+
+    # 2) chunk-end states
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)               # (b,h,c,Q)
+    states = jnp.einsum("bckhn,bhck,bckhp->bchpn", Bc, decay_states, Xc)
+
+    # 3) inter-chunk recurrence (the only sequential part: c steps)
+    chunk_decay = jnp.exp(A_cs[..., -1])                        # (b,h,c)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+    states = states.astype(jnp.float32)
+
+    def step(carry, inp):
+        dec, s = inp                                            # (b,h), (b,h,p,n)
+        new = dec[..., None, None] * carry + s
+        return new, carry                                       # emit state *entering* chunk
+
+    final, prev_states = jax.lax.scan(
+        step, init_state,
+        (chunk_decay.transpose(2, 0, 1), states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)          # (b,c,h,p,n)
+
+    # 4) state -> output within each chunk
+    state_decay_out = jnp.exp(A_cs)                             # (b,h,c,Q)
+    Y_off = jnp.einsum("bcqhn,bchpn,bhcq->bcqhp", Cc, prev_states, state_decay_out)
+
+    return (Y_diag + Y_off).reshape(b, l, h, p), final
+
+
+# ---------------------------------------------------------------------------
+# Full block forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x:(B,S,C), w:(W,C)."""
+    W = w.shape[0]
+    pads = [jnp.pad(x, ((0, 0), (W - 1 - i, i), (0, 0)))[:, : x.shape[1]]
+            for i in range(W)]
+    # pads[i][t] = x[t - (W-1-i)]
+    out = sum(p * w[i][None, None, :] for i, p in enumerate(pads))
+    return out + b[None, None, :]
+
+
+def mamba2_fwd(params, x, *, d_state: int, expand: int, head_dim: int,
+               chunk: int = 128, n_groups: int = 1):
+    B_, S, D = x.shape
+    dims = mamba2_dims(D, d_state, expand, head_dim, n_groups)
+    di, H, P, N = dims["d_inner"], dims["n_heads"], head_dim, d_state
+
+    dt_ = x.dtype
+    z = x @ params["wz"].astype(dt_)
+    xs = jax.nn.silu(_causal_conv(x @ params["wx"].astype(dt_),
+                                  params["conv_x"].astype(dt_),
+                                  params["conv_x_b"].astype(dt_)))
+    Bm = jax.nn.silu(_causal_conv(x @ params["wB"].astype(dt_),
+                                  params["conv_B"].astype(dt_),
+                                  params["conv_B_b"].astype(dt_)))
+    Cm = jax.nn.silu(_causal_conv(x @ params["wC"].astype(dt_),
+                                  params["conv_C"].astype(dt_),
+                                  params["conv_C_b"].astype(dt_)))
+    dt_raw = x @ params["wdt"].astype(dt_)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])     # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                # (H,)
+    dtA = dt * A[None, None, :]                                  # log decay
+
+    X = xs.reshape(B_, S, H, P) * dt[..., None].astype(dt_)
+    rep = H // n_groups
+    Bh = jnp.repeat(Bm.reshape(B_, S, n_groups, N), rep, axis=2)
+    Ch = jnp.repeat(Cm.reshape(B_, S, n_groups, N), rep, axis=2)
+
+    Y, _ = ssd_chunked(X, dtA, Bh.astype(dt_), Ch.astype(dt_), chunk)
+    Y = Y.astype(dt_) + params["D"].astype(dt_)[None, None, :, None] * xs.reshape(B_, S, H, P)
+    y = Y.reshape(B_, S, di)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"].astype(dt_)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, O(1) state)
+# ---------------------------------------------------------------------------
+
+def init_mamba2_cache(batch: int, d_model: int, *, d_state: int, expand: int,
+                      head_dim: int, conv_width: int = 4, n_groups: int = 1,
+                      dtype=jnp.float32):
+    dims = mamba2_dims(d_model, d_state, expand, head_dim, n_groups)
+    gn = n_groups * d_state
+    return {
+        "conv_x": jnp.zeros((batch, conv_width - 1, dims["d_inner"]), dtype),
+        "conv_B": jnp.zeros((batch, conv_width - 1, gn), dtype),
+        "conv_C": jnp.zeros((batch, conv_width - 1, gn), dtype),
+        "ssm": jnp.zeros((batch, dims["n_heads"], head_dim, d_state), dtype),
+    }
+
+
+def _conv_step(state, new, w, b):
+    """state: (B, W-1, C); new: (B, C) -> (out (B, C), new state)."""
+    window = jnp.concatenate([state, new[:, None, :]], axis=1)
+    out = jnp.einsum("bwc,wc->bc", window, w) + b
+    return out, window[:, 1:]
+
+
+def mamba2_step(params, cache, x, *, d_state: int, expand: int,
+                head_dim: int, n_groups: int = 1):
+    """x: (B, 1, D) -> (y (B,1,D), new cache)."""
+    B_, one, D = x.shape
+    dims = mamba2_dims(D, d_state, expand, head_dim, n_groups)
+    di, H, P, N = dims["d_inner"], dims["n_heads"], head_dim, d_state
+    dt_ = x.dtype
+    xt = x[:, 0]
+
+    z = xt @ params["wz"].astype(dt_)
+    xs_raw, cx = _conv_step(cache["conv_x"], xt @ params["wx"].astype(dt_),
+                            params["conv_x"].astype(dt_),
+                            params["conv_x_b"].astype(dt_))
+    Bm_raw, cB = _conv_step(cache["conv_B"], xt @ params["wB"].astype(dt_),
+                            params["conv_B"].astype(dt_),
+                            params["conv_B_b"].astype(dt_))
+    Cm_raw, cC = _conv_step(cache["conv_C"], xt @ params["wC"].astype(dt_),
+                            params["conv_C"].astype(dt_),
+                            params["conv_C_b"].astype(dt_))
+    xs, Bm, Cm = map(jax.nn.silu, (xs_raw, Bm_raw, Cm_raw))
+    dt_raw = xt @ params["wdt"].astype(dt_)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, :])
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A[None, :]).astype(dt_)                 # (B,H)
+
+    rep = H // n_groups
+    Bh = jnp.repeat(Bm.reshape(B_, n_groups, N), rep, axis=1)
+    Ch = jnp.repeat(Cm.reshape(B_, n_groups, N), rep, axis=1)
+    Xh = xs.reshape(B_, H, P) * dt[..., None].astype(dt_)
+
+    new_ssm = (decay[..., None, None] * cache["ssm"]
+               + jnp.einsum("bhp,bhn->bhpn", Xh, Bh))
+    Yh = jnp.einsum("bhpn,bhn->bhp", new_ssm, Ch)
+    Yh = Yh + params["D"].astype(dt_)[None, :, None] * xs.reshape(B_, H, P)
+    y = Yh.reshape(B_, di)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    y = (y @ params["out_proj"].astype(dt_))[:, None, :]
+    return y, {"conv_x": cx, "conv_B": cB, "conv_C": cC, "ssm": new_ssm}

@@ -1,0 +1,333 @@
+"""xLSTM blocks: sLSTM (scalar memory, recurrent gating) and mLSTM (matrix
+memory) — Beck et al. 2024 (arXiv:2405.04517), stabilized formulations.
+
+TPU adaptation notes (see DESIGN.md):
+  * both cells are implemented as stabilized recurrent scans over time; to
+    keep the backward-pass memory bounded the scan is blocked into chunks of
+    ``chunk`` steps with ``jax.checkpoint`` around each chunk (boundary states
+    stored, interiors recomputed).
+  * a chunkwise-parallel mLSTM (SSD-style) is the §Perf hillclimb path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import dense_init, init_layernorm, layernorm
+
+
+def _logsigmoid(x):
+    return -jax.nn.softplus(-x)
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def init_slstm(key, d_model: int, n_heads: int, dtype=jnp.float32):
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": init_layernorm(d_model, dtype),
+        "w_in": dense_init(ks[0], d_model, 4 * d_model, dtype),        # i,f,z,o
+        "r": (jax.random.normal(ks[1], (n_heads, dh, 4 * dh))
+              * (1.0 / dh ** 0.5)).astype(dtype),                      # block-diag recurrent
+        "b": jnp.zeros((4 * d_model,), dtype),
+        "gn": init_layernorm(d_model, dtype),                          # post group-norm
+        "w_up": dense_init(ks[2], d_model, (4 * d_model) // 3, dtype),
+        "w_gate": dense_init(jax.random.fold_in(ks[2], 1), d_model, (4 * d_model) // 3, dtype),
+        "w_down": dense_init(ks[3], (4 * d_model) // 3, d_model, dtype),
+    }
+
+
+def slstm_cell(params, carry, x_t, n_heads: int):
+    """One step. carry = (h, c, n, m) each (B, d). x_t: (B, d)."""
+    h, c, n, m = carry
+    B, d = x_t.shape
+    dh = d // n_heads
+    gates_in = x_t @ params["w_in"].astype(x_t.dtype)                  # (B, 4d)
+    hh = h.reshape(B, n_heads, dh)
+    gates_rec = jnp.einsum("bhd,hde->bhe", hh, params["r"].astype(x_t.dtype))
+    gates = (gates_in.reshape(B, n_heads, 4 * dh) + gates_rec
+             ).reshape(B, 4 * d) + params["b"].astype(x_t.dtype)
+    i_r, f_r, z_r, o_r = jnp.split(gates.astype(jnp.float32), 4, axis=-1)
+
+    f_log = _logsigmoid(f_r)
+    m_new = jnp.maximum(f_log + m, i_r)
+    i_g = jnp.exp(i_r - m_new)
+    f_g = jnp.exp(f_log + m - m_new)
+    c_new = f_g * c + i_g * jnp.tanh(z_r)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_r) * c_new / jnp.maximum(n_new, 1e-6)
+    h_new = h_new.astype(x_t.dtype)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def slstm_scan(params, x, n_heads: int, chunk: int = 64, init=None):
+    """x: (B, S, d) -> (h_seq (B,S,d), final carry)."""
+    B, S, d = x.shape
+    if init is None:
+        z32 = jnp.zeros((B, d), jnp.float32)
+        init = (jnp.zeros((B, d), x.dtype), z32, z32, z32 - 30.0)
+
+    cell = partial(slstm_cell, params, n_heads=n_heads)
+
+    @jax.checkpoint
+    def run_chunk(carry, xc):                                          # xc: (Q, B, d)
+        return jax.lax.scan(lambda cr, xt: cell(cr, xt), carry, xc)
+
+    q = min(chunk, S)
+    while S % q:
+        q -= 1
+    xs = x.transpose(1, 0, 2).reshape(S // q, q, B, d)
+    carry, hs = jax.lax.scan(run_chunk, init, xs)
+    h_seq = hs.reshape(S, B, d).transpose(1, 0, 2)
+    return h_seq, carry
+
+
+def slstm_block_fwd(params, x, *, n_heads: int, chunk: int = 64):
+    """Full pre-norm sLSTM block with post-FFN (factor 4/3, gated)."""
+    h, _ = slstm_scan(params, layernorm(params["ln"], x), n_heads, chunk)
+    x = x + layernorm(params["gn"], h)
+    ff_in = x
+    g = jax.nn.silu(ff_in @ params["w_gate"].astype(x.dtype))
+    up = ff_in @ params["w_up"].astype(x.dtype)
+    return x + (g * up) @ params["w_down"].astype(x.dtype)
+
+
+def init_slstm_cache(batch: int, d_model: int, dtype=jnp.float32):
+    z32 = jnp.zeros((batch, d_model), jnp.float32)
+    return {"h": jnp.zeros((batch, d_model), dtype), "c": z32, "n": z32,
+            "m": z32 - 30.0}
+
+
+def slstm_block_step(params, cache, x, *, n_heads: int):
+    """x: (B,1,d) decode step."""
+    xt = layernorm(params["ln"], x)[:, 0]
+    carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+    carry, h = slstm_cell(params, carry, xt, n_heads)
+    y = x + layernorm(params["gn"], h)[:, None, :]
+    g = jax.nn.silu(y @ params["w_gate"].astype(x.dtype))
+    up = y @ params["w_up"].astype(x.dtype)
+    y = y + (g * up) @ params["w_down"].astype(x.dtype)
+    return y, {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+#
+# Two sequence implementations:
+#   * recurrent  — stabilized per-step scan (chunk-rematted). Baseline; the
+#     backward pass materializes (B,H,P,P) matrix-memory states and starves
+#     the MXU (tiny per-step ops).
+#   * chunkwise  — SSD-style parallel form (§Perf optimization): intra-chunk
+#     quadratic attention-like term (dense matmuls) + an inter-chunk
+#     recurrence carrying only the stabilized (C̃, ñ, m) boundary state.
+#     Identical outputs (tested to 1e-4 against the recurrent form).
+
+def init_mlstm(key, d_model: int, n_heads: int, *, proj_factor: int = 2,
+               dtype=jnp.float32):
+    di = proj_factor * d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": init_layernorm(d_model, dtype),
+        "w_up": dense_init(ks[0], d_model, di, dtype),
+        "w_gate_out": dense_init(ks[1], d_model, di, dtype),
+        "wq": dense_init(ks[2], di, di, dtype),
+        "wk": dense_init(ks[3], di, di, dtype),
+        "wv": dense_init(ks[4], di, di, dtype),
+        "w_if": dense_init(ks[5], di, 2 * n_heads, jnp.float32, scale=0.02),
+        "b_if": jnp.concatenate([jnp.zeros((n_heads,)),
+                                 jnp.linspace(3.0, 6.0, n_heads)]),     # forget-gate bias high
+        "gn": init_layernorm(di, dtype),
+        "w_down": dense_init(ks[6], di, d_model, dtype),
+    }
+
+
+def mlstm_cell(carry, inp):
+    """carry: (C (B,H,P,P), n (B,H,P), m (B,H)); inp: q,k,v (B,H,P), i/f raw (B,H)."""
+    C, n, m = carry
+    q, k, v, i_r, f_r = inp
+    P = q.shape[-1]
+    f_log = _logsigmoid(f_r)
+    m_new = jnp.maximum(f_log + m, i_r)                                 # (B,H)
+    i_g = jnp.exp(i_r - m_new)
+    f_g = jnp.exp(f_log + m - m_new)
+    k32 = k.astype(jnp.float32) / P ** 0.5
+    v32 = v.astype(jnp.float32)
+    C_new = f_g[..., None, None] * C + i_g[..., None, None] * (
+        k32[..., :, None] * v32[..., None, :])                          # (B,H,P,P)
+    n_new = f_g[..., None] * n + i_g[..., None] * k32
+    q32 = q.astype(jnp.float32)
+    num = jnp.einsum("bhp,bhpv->bhv", q32, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q32, n_new)),
+                      jnp.exp(-m_new)) + 1e-6
+    h = (num / den[..., None]).astype(q.dtype)
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_scan(x_inner, params, n_heads: int, chunk: int = 32, init=None):
+    """x_inner: (B, S, di) pre-projected. Returns (h (B,S,di), carry)."""
+    B, S, di = x_inner.shape
+    P = di // n_heads
+    q = (x_inner @ params["wq"].astype(x_inner.dtype)).reshape(B, S, n_heads, P)
+    k = (x_inner @ params["wk"].astype(x_inner.dtype)).reshape(B, S, n_heads, P)
+    v = (x_inner @ params["wv"].astype(x_inner.dtype)).reshape(B, S, n_heads, P)
+    if_r = (x_inner.astype(jnp.float32) @ params["w_if"]
+            + params["b_if"]).reshape(B, S, 2, n_heads)
+    i_r, f_r = if_r[:, :, 0], if_r[:, :, 1]                             # (B,S,H)
+
+    if init is None:
+        init = (jnp.zeros((B, n_heads, P, P), jnp.float32),
+                jnp.zeros((B, n_heads, P), jnp.float32),
+                jnp.zeros((B, n_heads), jnp.float32) - 30.0)
+
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    resh = lambda a: a.transpose(1, 0, *range(2, a.ndim)).reshape(
+        S // Q, Q, *a.shape[0:1], *a.shape[2:])
+    xs = tuple(map(resh, (q, k, v, i_r, f_r)))
+
+    @jax.checkpoint
+    def run_chunk(carry, xc):
+        return jax.lax.scan(mlstm_cell, carry, xc)
+
+    carry, hs = jax.lax.scan(run_chunk, init, xs)
+    h = hs.reshape(S, B, n_heads, P).transpose(1, 0, 2, 3).reshape(B, S, di)
+    return h, carry
+
+
+def mlstm_chunkwise(q, k, v, i_r, f_r, chunk: int, init=None):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: (B,S,H,P); i_r: raw input-gate logits (B,S,H); f_r: raw
+    forget-gate logits (B,S,H). Returns (h (B,S,H,P), carry).
+    All gate math in fp32; the intra-chunk term is a masked (Q×Q) matmul.
+    """
+    B, S, H, P = q.shape
+    Q = chunk
+    assert S % Q == 0, (S, Q)
+    NC = S // Q
+    scale = 1.0 / P ** 0.5
+    f_log = _logsigmoid(f_r.astype(jnp.float32))
+    i32 = i_r.astype(jnp.float32)
+
+    resh = lambda a: a.reshape(B, NC, Q, *a.shape[2:])
+    # q/k/v stay in input dtype (bf16 in production): the score and output
+    # einsums accumulate in fp32 via preferred_element_type; only the gate
+    # path is fp32. Halves the full-sequence stacks + their cotangents.
+    qc = resh(q)
+    kc = resh(k * jnp.asarray(scale, k.dtype))
+    vc = resh(v)
+    ic = resh(i32)                                   # (B,NC,Q,H)
+    fc = resh(f_log)
+    b = jnp.cumsum(fc, axis=2)                       # inclusive log-decay sums
+
+    # intra-chunk log weights D[t, j] = b_t - b_j + i_j  (j <= t)
+    D = b[:, :, :, None, :] - b[:, :, None, :, :] + ic[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    D = jnp.where(tri, D, -1e30)                     # (B,NC,Q,Q,H)
+    m_intra = jnp.max(D, axis=3)                     # (B,NC,Q,H)
+
+    if init is None:
+        init = (jnp.zeros((B, H, P, P), jnp.float32),
+                jnp.zeros((B, H, P), jnp.float32),
+                jnp.zeros((B, H), jnp.float32) - 30.0)
+
+    def chunk_step(carry, xs):
+        C_p, n_p, m_p = carry                        # scaled state, log-scale m_p
+        qq, kk, vv, bb, ii, DD, mi = xs              # (B,Q,H,P)... (B,Q,Q,H)...
+        m_state = bb + m_p[:, None, :]               # (B,Q,H)
+        m_t = jnp.maximum(mi, m_state)
+        s = jnp.einsum("bqhp,bjhp->bqjh", qq, kk,
+                       preferred_element_type=jnp.float32)
+        w = jnp.exp(DD - m_t[:, :, None, :]) * s     # (B,Q,Q,H) fp32
+        num = jnp.einsum("bqjh,bjhp->bqhp", w.astype(vv.dtype), vv,
+                         preferred_element_type=jnp.float32)
+        den = jnp.sum(w, axis=2)                     # (B,Q,H) == q·n_intra
+        sc_state = jnp.exp(m_state - m_t)            # (B,Q,H)
+        num = num + sc_state[..., None] * jnp.einsum(
+            "bqhp,bhpv->bqhv", qq.astype(jnp.float32), C_p)
+        den = den + sc_state * jnp.einsum(
+            "bqhp,bhp->bqh", qq.astype(jnp.float32), n_p)
+        h = num / (jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None] + 1e-6)
+
+        # carry to next chunk
+        g = bb[:, -1:, :] - bb + ii                  # (B,Q,H)
+        m_C = jnp.maximum(bb[:, -1] + m_p, jnp.max(g, axis=1))   # (B,H)
+        sc_prev = jnp.exp(bb[:, -1] + m_p - m_C)
+        wg = jnp.exp(g - m_C[:, None, :])            # (B,Q,H)
+        C_n = (sc_prev[..., None, None] * C_p
+               + jnp.einsum("bqh,bqhp,bqhv->bhpv",
+                            wg.astype(kk.dtype), kk, vv,
+                            preferred_element_type=jnp.float32))
+        n_n = sc_prev[..., None] * n_p + jnp.einsum(
+            "bqh,bqhp->bhp", wg.astype(kk.dtype), kk,
+            preferred_element_type=jnp.float32)
+        return (C_n, n_n, m_C), h
+
+    tr = lambda a: a.transpose(1, 0, *range(2, a.ndim))
+    xs = tuple(map(tr, (qc, kc, vc, b, ic, D, m_intra)))
+    carry, hs = jax.lax.scan(chunk_step, init, xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return h.astype(q.dtype), carry
+
+
+def mlstm_seq(x_inner, params, n_heads: int, chunk: int = 32,
+              impl: str = "recurrent"):
+    """Dispatch: recurrent scan (baseline) or chunkwise-parallel (§Perf)."""
+    if impl == "recurrent":
+        return mlstm_scan(x_inner, params, n_heads, chunk)
+    B, S, di = x_inner.shape
+    P = di // n_heads
+    q = (x_inner @ params["wq"].astype(x_inner.dtype)).reshape(B, S, n_heads, P)
+    k = (x_inner @ params["wk"].astype(x_inner.dtype)).reshape(B, S, n_heads, P)
+    v = (x_inner @ params["wv"].astype(x_inner.dtype)).reshape(B, S, n_heads, P)
+    if_r = (x_inner.astype(jnp.float32) @ params["w_if"]
+            + params["b_if"]).reshape(B, S, 2, n_heads)
+    h, carry = mlstm_chunkwise(q, k, v, if_r[:, :, 0], if_r[:, :, 1],
+                               min(chunk, S))
+    return h.reshape(B, S, di), carry
+
+
+def mlstm_block_fwd(params, x, *, n_heads: int, proj_factor: int = 2,
+                    chunk: int = 32, impl: str = "recurrent"):
+    xn = layernorm(params["ln"], x)
+    inner = xn @ params["w_up"].astype(x.dtype)
+    gate = jax.nn.silu(xn @ params["w_gate_out"].astype(x.dtype))
+    h, _ = mlstm_seq(inner, params, n_heads, chunk, impl=impl)
+    h = layernorm(params["gn"], h) * gate
+    return x + h @ params["w_down"].astype(x.dtype)
+
+
+def init_mlstm_cache(batch: int, d_model: int, n_heads: int,
+                     proj_factor: int = 2, dtype=jnp.float32):
+    di = proj_factor * d_model
+    P = di // n_heads
+    return {"C": jnp.zeros((batch, n_heads, P, P), jnp.float32),
+            "n": jnp.zeros((batch, n_heads, P), jnp.float32),
+            "m": jnp.zeros((batch, n_heads), jnp.float32) - 30.0}
+
+
+def mlstm_block_step(params, cache, x, *, n_heads: int, proj_factor: int = 2):
+    B, one, d = x.shape
+    di = proj_factor * d
+    P = di // n_heads
+    xn = layernorm(params["ln"], x)[:, 0]
+    inner = xn @ params["w_up"].astype(x.dtype)
+    gate = jax.nn.silu(xn @ params["w_gate_out"].astype(x.dtype))
+    q = (inner @ params["wq"].astype(x.dtype)).reshape(B, n_heads, P)
+    k = (inner @ params["wk"].astype(x.dtype)).reshape(B, n_heads, P)
+    v = (inner @ params["wv"].astype(x.dtype)).reshape(B, n_heads, P)
+    if_r = (inner.astype(jnp.float32) @ params["w_if"]
+            + params["b_if"]).reshape(B, 2, n_heads)
+    carry = (cache["C"], cache["n"], cache["m"])
+    carry, h = mlstm_cell(carry, (q, k, v, if_r[:, 0], if_r[:, 1]))
+    h = h.reshape(B, di)
+    h = layernorm(params["gn"], h) * gate
+    y = x + (h @ params["w_down"].astype(x.dtype))[:, None, :]
+    return y, {"C": carry[0], "n": carry[1], "m": carry[2]}

@@ -1,0 +1,629 @@
+"""Unified architecture zoo: one ArchConfig covers dense / MoE / MLA / SSM /
+xLSTM / hybrid / VLM / audio families.
+
+Layer parameters for uniform stacks are *stacked* along a leading axis and
+iterated with ``jax.lax.scan`` (keeps HLO compact — a 61-layer model compiles
+as one while-loop). Heterogeneous stacks (xLSTM's sLSTM/mLSTM mix) use a
+Python loop; Zamba2's shared attention block rides inside the scan behind a
+``lax.cond`` on the layer index.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.modules import (dense_init, embed_init, init_rmsnorm,
+                                  mlp_apply, init_mlp, rmsnorm, tree_stack)
+
+
+# ===========================================================================
+# Config
+# ===========================================================================
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    mlp_act: str = "silu"
+    mlp_gated: bool = True
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    embed_scale: bool = False        # gemma: scale embeddings by sqrt(d)
+    causal: bool = True
+    # --- MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: Optional[int] = None
+    capacity_factor: float = 1.25
+    moe_impl: str = "scatter"        # scatter (baseline) | grouped (§Perf)
+    # --- MLA (DeepSeek)
+    mla: bool = False
+    mtp: bool = False                # DeepSeek multi-token-prediction head
+    mtp_weight: float = 0.3
+    q_rank: int = 1536
+    kv_rank: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_head_dim: int = 128
+    # --- SSM (Mamba2)
+    ssm_state: int = 64
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    conv_width: int = 4
+    ssd_chunk: int = 128
+    # --- hybrid (Zamba2)
+    shared_attn_period: int = 0      # >0: shared attn block every N layers
+    # --- xLSTM
+    xlstm_pattern: Tuple[str, ...] = ()   # 'm' / 's' per layer
+    mlstm_proj_factor: int = 2
+    xlstm_chunk: int = 32
+    mlstm_impl: str = "recurrent"    # recurrent (baseline) | chunkwise (§Perf)
+    xlstm_scan_units: bool = False   # scan over periodic layer units (§Perf):
+                                     # bounds live buffers to ONE unit instead
+                                     # of the whole python-loop stack
+    # --- modality frontend (stub per the carve-out)
+    frontend: str = "none"           # none | audio | vision
+    frontend_dim: int = 0
+    n_patches: int = 256
+    # --- attention variant
+    window: Optional[int] = None     # sliding-window size (None = full)
+    attn_q_chunk: Optional[int] = None  # query-chunked attention (§Perf)
+    # --- numerics / training
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True
+    norm_eps: float = 1e-5
+    aux_loss_weight: float = 0.01
+    z_loss_weight: float = 0.001
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    source: str = ""                 # citation for the config
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return (self.vocab_size + 255) // 256 * 256
+
+    @property
+    def act_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def p_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def decode_supported(self) -> bool:
+        return self.family != "audio"
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if long-context decode is supported (O(1)/O(window) state)."""
+        return self.family in ("ssm", "hybrid") or self.window is not None
+
+    def with_window(self, window: int) -> "ArchConfig":
+        return dataclasses.replace(self, window=window)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ===========================================================================
+# Parameter init
+# ===========================================================================
+
+def _init_dense_block(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "attn": attn.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.hd, cfg.p_dtype,
+                                    cfg.qkv_bias),
+        "ln2": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_gated, cfg.p_dtype),
+    }
+
+
+def _init_moe_block(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    if cfg.mla:
+        a = attn.init_mla(k1, cfg.d_model, cfg.n_heads, q_rank=cfg.q_rank,
+                          kv_rank=cfg.kv_rank, qk_nope=cfg.qk_nope,
+                          qk_rope=cfg.qk_rope, v_dim=cfg.v_head_dim,
+                          dtype=cfg.p_dtype)
+    else:
+        a = attn.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.hd, cfg.p_dtype, cfg.qkv_bias)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "attn": a,
+        "ln2": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "moe": moe_lib.init_moe(k2, cfg.d_model, cfg.moe_d_ff or cfg.d_ff,
+                                cfg.n_experts, cfg.n_shared_experts,
+                                gated=cfg.mlp_gated, dtype=cfg.p_dtype),
+    }
+
+
+def _init_mamba_block(key, cfg: ArchConfig):
+    return {
+        "ln": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+        "mixer": ssm_lib.init_mamba2(key, cfg.d_model, d_state=cfg.ssm_state,
+                                     expand=cfg.ssm_expand,
+                                     head_dim=cfg.ssm_head_dim,
+                                     conv_width=cfg.conv_width,
+                                     dtype=cfg.p_dtype),
+    }
+
+
+def init_params(key, cfg: ArchConfig):
+    keys = jax.random.split(key, cfg.n_layers + 5)
+    params = {}
+    if cfg.frontend == "audio":
+        params["frontend_proj"] = dense_init(keys[-1], cfg.frontend_dim,
+                                             cfg.d_model, cfg.p_dtype)
+    else:
+        params["embed"] = embed_init(keys[-1], cfg.padded_vocab, cfg.d_model,
+                                     cfg.p_dtype)
+        if cfg.frontend == "vision":
+            k1, k2 = jax.random.split(keys[-2])
+            params["projector"] = {
+                "w1": dense_init(k1, cfg.frontend_dim, cfg.d_model, cfg.p_dtype),
+                "w2": dense_init(k2, cfg.d_model, cfg.d_model, cfg.p_dtype),
+            }
+
+    lk = keys[: cfg.n_layers]
+    if cfg.family in ("dense", "vlm"):
+        params["blocks"] = tree_stack([_init_dense_block(k, cfg) for k in lk])
+    elif cfg.family == "audio":
+        params["blocks"] = tree_stack([_init_dense_block(k, cfg) for k in lk])
+    elif cfg.family == "moe":
+        params["blocks"] = tree_stack([_init_moe_block(k, cfg) for k in lk])
+    elif cfg.family == "hybrid":
+        params["blocks"] = tree_stack([_init_mamba_block(k, cfg) for k in lk])
+        params["shared_attn"] = _init_dense_block(keys[-3], cfg)
+    elif cfg.family == "ssm":
+        assert len(cfg.xlstm_pattern) == cfg.n_layers
+        blocks = []
+        for k, kind in zip(lk, cfg.xlstm_pattern):
+            if kind == "s":
+                blocks.append(("s", xlstm_lib.init_slstm(k, cfg.d_model,
+                                                         cfg.n_heads, cfg.p_dtype)))
+            else:
+                blocks.append(("m", xlstm_lib.init_mlstm(
+                    k, cfg.d_model, cfg.n_heads,
+                    proj_factor=cfg.mlstm_proj_factor, dtype=cfg.p_dtype)))
+        params["blocks_list"] = [b for _, b in blocks]
+    else:
+        raise ValueError(cfg.family)
+
+    if cfg.mtp:
+        km = jax.random.split(keys[-5], 2)
+        params["mtp"] = {
+            "proj": dense_init(km[0], 2 * cfg.d_model, cfg.d_model, cfg.p_dtype),
+            "norm_h": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+            "norm_e": init_rmsnorm(cfg.d_model, cfg.p_dtype),
+            "block": _init_dense_block(km[1], cfg.replace(
+                mla=False, d_ff=max(cfg.moe_d_ff or cfg.d_ff, cfg.d_ff))),
+        }
+    params["final_norm"] = init_rmsnorm(cfg.d_model, cfg.p_dtype)
+    if cfg.family == "audio":
+        params["lm_head"] = dense_init(keys[-4], cfg.d_model, cfg.padded_vocab,
+                                       cfg.p_dtype)
+    elif not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[-4], cfg.d_model, cfg.padded_vocab,
+                                       cfg.p_dtype)
+    return params
+
+
+# ===========================================================================
+# Block forwards
+# ===========================================================================
+
+def _dense_block_fwd(cfg: ArchConfig, p, x, positions):
+    h = x + attn.attention_fwd(
+        p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), n_heads=cfg.n_heads,
+        n_kv=cfg.n_kv_heads, head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+        causal=cfg.causal, window=cfg.window, positions=positions)
+    h = h + mlp_apply(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps), cfg.mlp_act)
+    return h
+
+
+def _moe_block_fwd(cfg: ArchConfig, p, x, positions):
+    xn = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla:
+        a = attn.mla_fwd(p["attn"], xn, n_heads=cfg.n_heads, qk_nope=cfg.qk_nope,
+                         qk_rope=cfg.qk_rope, v_dim=cfg.v_head_dim,
+                         kv_rank=cfg.kv_rank, rope_theta=cfg.rope_theta,
+                         causal=cfg.causal, window=cfg.window,
+                         positions=positions, q_chunk=cfg.attn_q_chunk)
+    else:
+        a = attn.attention_fwd(p["attn"], xn, n_heads=cfg.n_heads,
+                               n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                               rope_theta=cfg.rope_theta, causal=cfg.causal,
+                               window=cfg.window, positions=positions)
+    h = x + a
+    moe_fn = (moe_lib.moe_apply_grouped if cfg.moe_impl == "grouped"
+              else moe_lib.moe_apply)
+    y, aux = moe_fn(p["moe"], rmsnorm(p["ln2"], h, cfg.norm_eps),
+                    top_k=cfg.top_k,
+                    capacity_factor=cfg.capacity_factor,
+                    act=cfg.mlp_act)
+    return h + y, aux
+
+
+def _mamba_block_fwd(cfg: ArchConfig, p, x):
+    return x + ssm_lib.mamba2_fwd(
+        p["mixer"], rmsnorm(p["ln"], x, cfg.norm_eps), d_state=cfg.ssm_state,
+        expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim, chunk=cfg.ssd_chunk)
+
+
+# ===========================================================================
+# Full forward (training / prefill)
+# ===========================================================================
+
+def embed_inputs(params, cfg: ArchConfig, batch):
+    """Returns (hidden (B,S,D), positions (B,S) or None)."""
+    if cfg.family == "audio":
+        x = batch["frames"].astype(cfg.act_dtype) @ params["frontend_proj"].astype(cfg.act_dtype)
+        return x, None
+    tok = params["embed"].astype(cfg.act_dtype)[batch["tokens"]]
+    if cfg.embed_scale:
+        tok = tok * jnp.asarray(cfg.d_model ** 0.5, cfg.act_dtype)
+    if cfg.family == "vlm":
+        pe = batch["patch_embeds"].astype(cfg.act_dtype)
+        proj = params["projector"]
+        pe = jax.nn.gelu(pe @ proj["w1"].astype(cfg.act_dtype))
+        pe = pe @ proj["w2"].astype(cfg.act_dtype)
+        tok = jnp.concatenate([pe, tok], axis=1)
+    return tok, None
+
+
+def _logits(params, cfg: ArchConfig, h):
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if cfg.tie_embeddings and cfg.family != "audio":
+        return h @ params["embed"].astype(h.dtype).T
+    return h @ params["lm_head"].astype(h.dtype)
+
+
+def _pattern_period(pattern):
+    """Smallest p such that pattern repeats every p layers."""
+    L = len(pattern)
+    for p in range(1, L + 1):
+        if L % p == 0 and pattern == pattern[:p] * (L // p):
+            return p
+    return L
+
+
+def forward(params, cfg: ArchConfig, batch, return_hidden: bool = False):
+    """-> (logits (B,S,V), aux dict). return_hidden adds aux['hidden']."""
+    x, _ = embed_inputs(params, cfg, batch)
+    B, S, D = x.shape
+    positions = jnp.arange(S)[None, :]
+    aux = {"load_balance_loss": jnp.zeros((), jnp.float32),
+           "router_z_loss": jnp.zeros((), jnp.float32)}
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        def body(h, p):
+            return _dense_block_fwd(cfg, p, h, positions), None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+
+    elif cfg.family == "moe":
+        def body(h, p):
+            h, a = _moe_block_fwd(cfg, p, h, positions)
+            return h, (a.load_balance_loss, a.router_z_loss)
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, (lb, zl) = jax.lax.scan(body, x, params["blocks"])
+        aux["load_balance_loss"] = jnp.mean(lb)
+        aux["router_z_loss"] = jnp.mean(zl)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        period = cfg.shared_attn_period
+
+        def body(carry, inp):
+            h = carry
+            i, p = inp
+            h = _mamba_block_fwd(cfg, p, h)
+            if period > 0:
+                h = jax.lax.cond(
+                    (i + 1) % period == 0,
+                    lambda hh: _dense_block_fwd(cfg, shared, hh, positions),
+                    lambda hh: hh, h)
+            return h, None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        idx = jnp.arange(cfg.n_layers)
+        x, _ = jax.lax.scan(body, x, (idx, params["blocks"]))
+
+    elif cfg.family == "ssm":
+        def block_fn(kind):
+            if kind == "s":
+                return partial(xlstm_lib.slstm_block_fwd, n_heads=cfg.n_heads,
+                               chunk=cfg.xlstm_chunk)
+            return partial(xlstm_lib.mlstm_block_fwd, n_heads=cfg.n_heads,
+                           proj_factor=cfg.mlstm_proj_factor,
+                           chunk=cfg.xlstm_chunk, impl=cfg.mlstm_impl)
+
+        period = _pattern_period(cfg.xlstm_pattern)
+        if cfg.xlstm_scan_units and period < cfg.n_layers:
+            # scan over repeating units: the while loop bounds live buffers
+            # to one unit's backward instead of the whole stack (Perf)
+            n_units = cfg.n_layers // period
+            unit_kinds = cfg.xlstm_pattern[:period]
+            stacked = tuple(
+                tree_stack([params["blocks_list"][u * period + j]
+                            for u in range(n_units)])
+                for j in range(period))
+
+            def unit_body(h, unit_params):
+                for j, kind in enumerate(unit_kinds):
+                    fn = block_fn(kind)
+                    # nested remat: only ONE block's backward is live at a
+                    # time inside the unit's recompute
+                    h = jax.checkpoint(fn)(unit_params[j], h) if cfg.remat \
+                        else fn(unit_params[j], h)
+                return h, None
+            body = jax.checkpoint(unit_body) if cfg.remat else unit_body
+            x, _ = jax.lax.scan(body, x, stacked)
+        else:
+            for kind, p in zip(cfg.xlstm_pattern, params["blocks_list"]):
+                fn = block_fn(kind)
+                x = jax.checkpoint(fn)(p, x) if cfg.remat else fn(p, x)
+    else:
+        raise ValueError(cfg.family)
+
+    if return_hidden:
+        aux["hidden"] = x
+    return _logits(params, cfg, x), aux
+
+
+def mtp_logits(params, cfg: ArchConfig, hidden, tokens):
+    """DeepSeek-V3 multi-token-prediction head (one extra depth):
+    position t combines its final hidden state with the embedding of token
+    t+1 to predict token t+2. hidden: (B,S,D); tokens: (B,S).
+    Returns logits (B, S-1, V) for targets tokens[t+2]."""
+    mtp = params["mtp"]
+    h = rmsnorm(mtp["norm_h"], hidden[:, :-1], cfg.norm_eps)
+    e = params["embed"].astype(hidden.dtype)[tokens[:, 1:]]
+    e = rmsnorm(mtp["norm_e"], e, cfg.norm_eps)
+    x = jnp.concatenate([h, e], axis=-1) @ mtp["proj"].astype(hidden.dtype)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x = _dense_block_fwd(cfg.replace(mla=False), mtp["block"], x, positions)
+    return _logits(params, cfg, x)
+
+
+# ===========================================================================
+# Loss / train step
+# ===========================================================================
+
+def _ce(logits, labels):
+    logits32 = logits.astype(jnp.float32)
+    mask = (labels >= 0)
+    safe = jnp.where(mask, labels, 0)
+    ce = -jnp.take_along_axis(jax.nn.log_softmax(logits32, -1),
+                              safe[..., None], axis=-1)[..., 0]
+    return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    logits, aux = forward(params, cfg, batch, return_hidden=cfg.mtp)
+    labels = batch["labels"]
+    if cfg.family == "vlm":                       # loss only on text positions
+        logits = logits[:, -labels.shape[1]:]
+    ce = _ce(logits, labels)
+    total = (ce + cfg.aux_loss_weight * aux["load_balance_loss"]
+             + cfg.z_loss_weight * aux["router_z_loss"])
+    metrics = {"ce": ce}
+    if cfg.mtp:
+        hidden = aux.pop("hidden")
+        m_logits = mtp_logits(params, cfg, hidden, batch["tokens"])
+        mtp_ce = _ce(m_logits, labels[:, 1:])
+        total = total + cfg.mtp_weight * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    aux.pop("hidden", None)
+    return total, {**metrics, **aux}
+
+
+def init_train_state(key, cfg: ArchConfig):
+    params = init_params(key, cfg)
+    zeros = lambda: jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"params": params, "mu": zeros(), "nu": zeros(),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_step(state, batch, cfg: ArchConfig, b1=0.9, b2=0.95, eps=1e-8):
+    """One AdamW step; returns (new_state, metrics)."""
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        state["params"], cfg, batch)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu_n = b1 * mu + (1 - b1) * g32
+        nu_n = b2 * nu + (1 - b2) * jnp.square(g32)
+        u = (mu_n / bc1) / (jnp.sqrt(nu_n / bc2) + eps)
+        p_n = p.astype(jnp.float32) - cfg.lr * (u + cfg.weight_decay * p.astype(jnp.float32))
+        return p_n.astype(p.dtype), mu_n, nu_n
+
+    flat_p, treedef = jax.tree_util.tree_flatten(state["params"])
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = {"params": new_p, "mu": new_mu, "nu": new_nu, "step": step}
+    return new_state, {"loss": loss, **metrics}
+
+
+# ===========================================================================
+# Decode: cache init + serve_step
+# ===========================================================================
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    dt = cfg.act_dtype
+    if cfg.family in ("dense", "vlm"):
+        one = attn.init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, dt)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), one)
+    if cfg.family == "moe":
+        if cfg.mla:
+            one = attn.init_mla_cache(batch, max_len, cfg.kv_rank, cfg.qk_rope, dt)
+        else:
+            one = attn.init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, dt)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), one)
+    if cfg.family == "hybrid":
+        m = ssm_lib.init_mamba2_cache(batch, cfg.d_model, d_state=cfg.ssm_state,
+                                      expand=cfg.ssm_expand,
+                                      head_dim=cfg.ssm_head_dim,
+                                      conv_width=cfg.conv_width, dtype=dt)
+        mstack = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), m)
+        n_apps = cfg.n_layers // cfg.shared_attn_period if cfg.shared_attn_period else 0
+        sa = attn.init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, dt)
+        sstack = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (max(n_apps, 1),) + x.shape).copy(), sa)
+        return {"mamba": mstack, "shared_attn": sstack}
+    if cfg.family == "ssm":
+        caches = []
+        for kind in cfg.xlstm_pattern:
+            if kind == "s":
+                caches.append(xlstm_lib.init_slstm_cache(batch, cfg.d_model, dt))
+            else:
+                caches.append(xlstm_lib.init_mlstm_cache(
+                    batch, cfg.d_model, cfg.n_heads, cfg.mlstm_proj_factor, dt))
+        return {"xlstm": caches}
+    raise ValueError(f"{cfg.family} has no decode cache (encoder-only?)")
+
+
+def serve_step(params, cfg: ArchConfig, cache, tokens, pos, kv_spec=None):
+    """Decode ONE token. tokens: (B,1) int32; pos: (B,) absolute positions.
+    Returns (logits (B, V), new_cache).
+
+    kv_spec: optional PartitionSpec for one layer's (B, Smax, KV, hd) KV
+    cache — forwarded to attention_decode to pin sequence-sharded caches
+    (see sharding/specs.py cache_specs(seq_shard=True) and §Perf)."""
+    x = params["embed"].astype(cfg.act_dtype)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.act_dtype)
+
+    if cfg.family in ("dense", "vlm"):
+        def body(carry, xs):
+            h = carry
+            p, c = xs
+            y, c2 = attn.attention_decode(
+                p["attn"], c, rmsnorm(p["ln1"], h, cfg.norm_eps), pos,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                rope_theta=cfg.rope_theta, window=cfg.window, kv_spec=kv_spec)
+            h = h + y
+            h = h + mlp_apply(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps),
+                              cfg.mlp_act)
+            return h, c2
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+
+    elif cfg.family == "moe":
+        def body(carry, xs):
+            h = carry
+            p, c = xs
+            xn = rmsnorm(p["ln1"], h, cfg.norm_eps)
+            if cfg.mla:
+                y, c2 = attn.mla_decode(p["attn"], c, xn, pos,
+                                        n_heads=cfg.n_heads, qk_nope=cfg.qk_nope,
+                                        qk_rope=cfg.qk_rope, v_dim=cfg.v_head_dim,
+                                        kv_rank=cfg.kv_rank,
+                                        rope_theta=cfg.rope_theta,
+                                        window=cfg.window)
+            else:
+                y, c2 = attn.attention_decode(p["attn"], c, xn, pos,
+                                              n_heads=cfg.n_heads,
+                                              n_kv=cfg.n_kv_heads,
+                                              head_dim=cfg.hd,
+                                              rope_theta=cfg.rope_theta,
+                                              window=cfg.window,
+                                              kv_spec=kv_spec)
+            h = h + y
+            y2, _ = moe_lib.moe_apply(p["moe"],
+                                      rmsnorm(p["ln2"], h, cfg.norm_eps),
+                                      top_k=cfg.top_k,
+                                      capacity_factor=cfg.capacity_factor,
+                                      act=cfg.mlp_act)
+            return h + y2, c2
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+
+    elif cfg.family == "hybrid":
+        # python loop: shared-attn applications each own a cache slot
+        new_mamba, new_shared = [], []
+        app = 0
+        for i in range(cfg.n_layers):
+            p = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+            c = jax.tree_util.tree_map(lambda a: a[i], cache["mamba"])
+            y, c2 = ssm_lib.mamba2_step(p["mixer"],
+                                        c, rmsnorm(p["ln"], x, cfg.norm_eps),
+                                        d_state=cfg.ssm_state,
+                                        expand=cfg.ssm_expand,
+                                        head_dim=cfg.ssm_head_dim)
+            x = x + y
+            new_mamba.append(c2)
+            if cfg.shared_attn_period and (i + 1) % cfg.shared_attn_period == 0:
+                sp = params["shared_attn"]
+                sc = jax.tree_util.tree_map(lambda a: a[app], cache["shared_attn"])
+                y, sc2 = attn.attention_decode(
+                    sp["attn"], sc, rmsnorm(sp["ln1"], x, cfg.norm_eps), pos,
+                    n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+                    rope_theta=cfg.rope_theta, window=cfg.window)
+                x = x + y
+                x = x + mlp_apply(sp["mlp"], rmsnorm(sp["ln2"], x, cfg.norm_eps),
+                                  cfg.mlp_act)
+                new_shared.append(sc2)
+                app += 1
+        new_cache = {"mamba": tree_stack(new_mamba),
+                     "shared_attn": tree_stack(new_shared) if new_shared
+                     else cache["shared_attn"]}
+
+    elif cfg.family == "ssm":
+        new_list = []
+        for kind, p, c in zip(cfg.xlstm_pattern, params["blocks_list"],
+                              cache["xlstm"]):
+            if kind == "s":
+                x, c2 = xlstm_lib.slstm_block_step(p, c, x, n_heads=cfg.n_heads)
+            else:
+                x, c2 = xlstm_lib.mlstm_block_step(
+                    p, c, x, n_heads=cfg.n_heads,
+                    proj_factor=cfg.mlstm_proj_factor)
+            new_list.append(c2)
+        new_cache = {"xlstm": new_list}
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,3 @@
+from repro.optim.solvers import (adamw_init, adamw_update, sgd_update,
+                                 momentum_init, momentum_update,
+                                 proximal_grad, cosine_schedule)

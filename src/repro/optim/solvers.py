@@ -1,0 +1,68 @@
+"""Optimizers (no optax): SGD, momentum, AdamW, the FedProx proximal helper,
+and a cosine LR schedule. All operate on pytrees of arrays."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_update(params, grads, lr: float):
+    return jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+
+
+def momentum_init(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)
+
+
+def momentum_update(params, grads, vel, lr: float, beta: float = 0.9):
+    vel = jax.tree_util.tree_map(
+        lambda v, g: beta * v + g.astype(jnp.float32), vel, grads)
+    params = jax.tree_util.tree_map(
+        lambda p, v: (p.astype(jnp.float32) - lr * v).astype(p.dtype),
+        params, vel)
+    return params, vel
+
+
+def adamw_init(params):
+    z = lambda: jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"mu": z(), "nu": z(), "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, opt, lr: float, *, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    step = opt["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1, bc2 = 1 - b1 ** t, 1 - b2 ** t
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu_n = b1 * mu + (1 - b1) * g32
+        nu_n = b2 * nu + (1 - b2) * jnp.square(g32)
+        u = (mu_n / bc1) / (jnp.sqrt(nu_n / bc2) + eps)
+        p_n = p.astype(jnp.float32) - lr * (u + weight_decay * p.astype(jnp.float32))
+        return p_n.astype(p.dtype), mu_n, nu_n
+
+    out = jax.tree_util.tree_map(upd, params, grads, opt["mu"], opt["nu"])
+    new_p = jax.tree_util.tree_map(lambda o: o[0], out,
+                                   is_leaf=lambda o: isinstance(o, tuple))
+    new_mu = jax.tree_util.tree_map(lambda o: o[1], out,
+                                    is_leaf=lambda o: isinstance(o, tuple))
+    new_nu = jax.tree_util.tree_map(lambda o: o[2], out,
+                                    is_leaf=lambda o: isinstance(o, tuple))
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}
+
+
+def proximal_grad(params, anchor, mu: float):
+    """∇ of the FedProx term (μ/2)||w − w0||²."""
+    return jax.tree_util.tree_map(lambda p, a: mu * (p - a), params, anchor)
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,44 @@
+import os
+import sys
+
+# Tests must see the 1 real CPU device (NOT the dry-run's 512 placeholders):
+# never import repro.launch.dryrun from tests.
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_fed_data():
+    """Small label-skew dataset shared by the FL integration tests."""
+    from repro.data.generators import mnist_like
+    return mnist_like(seed=0, n_clients=60, classes_per_client=2,
+                      total_train=4000, dim=32)
+
+
+@pytest.fixture(scope="session")
+def tiny_model():
+    from repro.models.paper_models import mclr
+    return mclr(32, 10)
+
+
+@pytest.fixture(scope="session")
+def fast_cfg():
+    from repro.fed.engine import FedConfig
+    return FedConfig(n_rounds=4, clients_per_round=10, local_epochs=5,
+                     batch_size=10, lr=0.05, n_groups=3, pretrain_scale=4,
+                     seed=0)
+
+
+def assert_finite(tree, name=""):
+    for leaf in jax.tree_util.tree_leaves(tree):
+        assert np.all(np.isfinite(np.asarray(leaf))), f"non-finite in {name}"

@@ -1,0 +1,101 @@
+"""Per-architecture smoke tests: reduced variant (2 layers, d_model<=512,
+<=4 experts), one forward + one train step + one decode step on CPU,
+asserting output shapes and no NaNs. The FULL configs are exercised only by
+the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import zoo
+
+ARCHS = sorted(registry.ARCHS)
+B, S = 2, 32
+
+
+def _smoke_batch(cfg, key):
+    if cfg.family == "audio":
+        return {"frames": jax.random.normal(key, (B, S, cfg.frontend_dim)),
+                "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        St = S - cfg.n_patches
+        return {"tokens": jax.random.randint(key, (B, St), 0, cfg.vocab_size),
+                "patch_embeds": jax.random.normal(
+                    key, (B, cfg.n_patches, cfg.frontend_dim)),
+                "labels": jax.random.randint(key, (B, St), 0, cfg.vocab_size)}
+    return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def test_reduced_config_limits(self, arch):
+        cfg = registry.smoke_variant(registry.get(arch))
+        assert cfg.n_layers == 2
+        assert cfg.d_model <= 512
+        assert cfg.n_experts <= 4
+
+    def test_forward_shapes_no_nans(self, arch):
+        cfg = registry.smoke_variant(registry.get(arch))
+        key = jax.random.PRNGKey(1)
+        params = zoo.init_params(key, cfg)
+        batch = _smoke_batch(cfg, key)
+        logits, aux = zoo.forward(params, cfg, batch)
+        exp_s = S if cfg.family != "vlm" else S
+        assert logits.shape == (B, exp_s, cfg.padded_vocab)
+        assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+    def test_train_step_no_nans(self, arch):
+        cfg = registry.smoke_variant(registry.get(arch))
+        key = jax.random.PRNGKey(2)
+        state = zoo.init_train_state(key, cfg)
+        batch = _smoke_batch(cfg, key)
+        state2, metrics = zoo.train_step(state, batch, cfg)
+        assert np.isfinite(float(metrics["loss"]))
+        for leaf in jax.tree_util.tree_leaves(state2["params"]):
+            assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
+        assert int(state2["step"]) == 1
+
+    def test_train_step_changes_params(self, arch):
+        cfg = registry.smoke_variant(registry.get(arch))
+        key = jax.random.PRNGKey(3)
+        state = zoo.init_train_state(key, cfg)
+        batch = _smoke_batch(cfg, key)
+        state2, _ = zoo.train_step(state, batch, cfg)
+        before = jax.tree_util.tree_leaves(state["params"])
+        after = jax.tree_util.tree_leaves(state2["params"])
+        assert any(not np.allclose(a, b) for a, b in zip(before, after))
+
+    def test_decode_step(self, arch):
+        cfg = registry.smoke_variant(registry.get(arch))
+        if not cfg.decode_supported:
+            pytest.skip("encoder-only: no decode step (hubert)")
+        key = jax.random.PRNGKey(4)
+        params = zoo.init_params(key, cfg)
+        cache = zoo.init_cache(cfg, B, 16)
+        logits, cache2 = zoo.serve_step(
+            params, cfg, cache, jnp.zeros((B, 1), jnp.int32),
+            jnp.zeros((B,), jnp.int32))
+        assert logits.shape == (B, cfg.padded_vocab)
+        assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+    def test_full_config_matches_assignment(self, arch):
+        """The full (non-smoke) config carries the assigned dimensions."""
+        cfg = registry.get(arch)
+        expected = {
+            "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+            "granite-20b": (52, 6144, 48, 1, 24576, 49152),
+            "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+            "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+            "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+            "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+            "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+            "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+            "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+            "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        }[arch]
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == expected
+        assert cfg.source != ""

@@ -1,0 +1,69 @@
+"""Clustering backends: K-Means++ (JAX) and hierarchical complete linkage."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import hierarchical, kmeans_inertia, kmeans_pp
+
+
+def _blobs(seed, k=3, per=10, dim=4, sep=8.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 1, (k, dim))
+    centers *= sep / np.linalg.norm(centers, axis=1, keepdims=True)
+    X = np.concatenate([c + rng.normal(0, 0.3, (per, dim)) for c in centers])
+    y = np.repeat(np.arange(k), per)
+    return X.astype(np.float32), y
+
+
+def _purity(labels, truth):
+    total = 0
+    for lbl in np.unique(labels):
+        members = truth[labels == lbl]
+        total += np.bincount(members).max()
+    return total / len(truth)
+
+
+class TestKMeansPP:
+    def test_recovers_blobs(self):
+        X, y = _blobs(0)
+        assign, centers = kmeans_pp(jax.random.PRNGKey(0), jnp.asarray(X), 3)
+        assert _purity(np.asarray(assign), y) == 1.0
+
+    def test_inertia_below_random(self):
+        X, y = _blobs(1, k=4, per=12)
+        assign, centers = kmeans_pp(jax.random.PRNGKey(1), jnp.asarray(X), 4)
+        good = float(kmeans_inertia(jnp.asarray(X), assign, centers))
+        rng = np.random.default_rng(0)
+        rand_assign = jnp.asarray(rng.integers(0, 4, len(X)))
+        rand_centers = jnp.asarray(rng.normal(0, 1, (4, X.shape[1])).astype(np.float32))
+        bad = float(kmeans_inertia(jnp.asarray(X), rand_assign, rand_centers))
+        assert good < bad / 5
+
+    @given(st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_all_clusters_valid(self, seed):
+        X, _ = _blobs(seed, k=3, per=6)
+        assign, _ = kmeans_pp(jax.random.PRNGKey(seed), jnp.asarray(X), 3)
+        a = np.asarray(assign)
+        assert a.min() >= 0 and a.max() < 3
+
+
+class TestHierarchical:
+    def test_recovers_blobs_from_distance(self):
+        X, y = _blobs(2)
+        D = np.linalg.norm(X[:, None] - X[None], axis=-1)
+        labels = hierarchical(D, 3)
+        assert _purity(labels, y) == 1.0
+
+    def test_k_clusters(self):
+        X, _ = _blobs(3, k=4, per=5)
+        D = np.linalg.norm(X[:, None] - X[None], axis=-1)
+        labels = hierarchical(D, 4)
+        assert len(np.unique(labels)) == 4
+
+    def test_trivial_k_equals_n(self):
+        X, _ = _blobs(4, k=2, per=3)
+        D = np.linalg.norm(X[:, None] - X[None], axis=-1)
+        labels = hierarchical(D, len(X))
+        assert len(np.unique(labels)) == len(X)

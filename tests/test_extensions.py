@@ -1,0 +1,91 @@
+"""Beyond-paper extensions: gate-network mixing, client dropout, MTP head."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import gating
+from repro.core.fedgroup import FedGroupTrainer
+from repro.fed.engine import FedAvgTrainer, FedConfig
+from repro.models import zoo
+
+
+class TestGateNetwork:
+    def test_weights_are_distribution(self):
+        key = jax.random.PRNGKey(0)
+        dpre = jax.random.normal(key, (5, 40))
+        G = jax.random.normal(jax.random.fold_in(key, 1), (3, 40))
+        w = np.asarray(gating.gate_weights(dpre, G, temperature=0.1))
+        np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-5)
+        assert np.all(w >= 0)
+
+    def test_low_temperature_is_hard_assignment(self):
+        key = jax.random.PRNGKey(1)
+        G = jax.random.normal(key, (3, 40))
+        dpre = G[1:2] + 0.01 * jax.random.normal(key, (1, 40))
+        w = np.asarray(gating.gate_weights(dpre, G, temperature=1e-3))
+        assert w[0, 1] > 0.99
+
+    def test_gated_eval_close_to_hard_at_low_tau(self, tiny_model,
+                                                 tiny_fed_data, fast_cfg):
+        tr = FedGroupTrainer(tiny_model, tiny_fed_data, fast_cfg)
+        tr.run(3)
+        hard = tr.evaluate_groups()
+        gated = gating.evaluate_gated(tr, temperature=0.02)
+        assert abs(gated - hard) < 0.15
+        assert 0.0 <= gated <= 1.0
+
+
+class TestClientDropout:
+    def test_dropout_shrinks_round(self, tiny_model, tiny_fed_data):
+        cfg = FedConfig(n_rounds=1, clients_per_round=20, local_epochs=2,
+                        batch_size=5, lr=0.05, seed=0, dropout_rate=0.5)
+        tr = FedAvgTrainer(tiny_model, tiny_fed_data, cfg)
+        sizes = [len(tr._select()) for _ in range(20)]
+        assert min(sizes) >= 1
+        assert np.mean(sizes) < 16      # ~half of 20 survive
+
+    def test_training_survives_dropout(self, tiny_model, tiny_fed_data):
+        cfg = FedConfig(n_rounds=3, clients_per_round=10, local_epochs=3,
+                        batch_size=10, lr=0.05, n_groups=3, pretrain_scale=4,
+                        seed=0, dropout_rate=0.4)
+        h = FedGroupTrainer(tiny_model, tiny_fed_data, cfg).run()
+        assert np.isfinite(h.max_acc) and h.max_acc > 0.2
+
+
+class TestMTP:
+    def test_mtp_head_trains(self):
+        cfg = registry.smoke_variant(registry.get("deepseek-v3-671b"))
+        cfg = cfg.replace(mtp=True)
+        key = jax.random.PRNGKey(0)
+        state = zoo.init_train_state(key, cfg)
+        batch = {"tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab_size),
+                 "labels": jax.random.randint(key, (2, 32), 0, cfg.vocab_size)}
+        state2, m = zoo.train_step(state, batch, cfg)
+        assert np.isfinite(float(m["loss"]))
+        assert "mtp_ce" in m and np.isfinite(float(m["mtp_ce"]))
+        assert "mtp" in state2["params"]
+
+    def test_mtp_increases_total_loss_not_ce(self):
+        cfg = registry.smoke_variant(registry.get("deepseek-v3-671b"))
+        key = jax.random.PRNGKey(1)
+        params = zoo.init_params(key, cfg.replace(mtp=True))
+        batch = {"tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab_size),
+                 "labels": jax.random.randint(key, (2, 32), 0, cfg.vocab_size)}
+        total_mtp, m1 = zoo.loss_fn(params, cfg.replace(mtp=True), batch)
+        # base ce computed from same params without the mtp term
+        total_base, m0 = zoo.loss_fn(params, cfg, batch)
+        assert float(m1["ce"]) == pytest.approx(float(m0["ce"]), rel=1e-5)
+        assert float(total_mtp) > float(total_base)
+
+    def test_mtp_logits_shape(self):
+        cfg = registry.smoke_variant(registry.get("deepseek-v3-671b"))
+        cfg = cfg.replace(mtp=True)
+        key = jax.random.PRNGKey(2)
+        params = zoo.init_params(key, cfg)
+        batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab_size),
+                 "labels": jax.random.randint(key, (2, 16), 0, cfg.vocab_size)}
+        _, aux = zoo.forward(params, cfg, batch, return_hidden=True)
+        lg = zoo.mtp_logits(params, cfg, aux["hidden"], batch["tokens"])
+        assert lg.shape == (2, 15, cfg.padded_vocab)

@@ -1,0 +1,121 @@
+"""Mesh-parallel FedGroup engine (fed/parallel.py): the vectorized round and
+distributed cold-start must agree with the sequential trainer machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fed import parallel as fp
+from repro.models.paper_models import mclr
+
+
+class TestParallelRound:
+    def _setup(self, K=8, max_n=20, dim=6, m=3):
+        key = jax.random.PRNGKey(0)
+        model = mclr(dim, 4)
+        params = model.init(key)
+        gp = jax.tree_util.tree_map(
+            lambda l: jnp.stack([l + 0.01 * i for i in range(m)]), params)
+        ks = jax.random.split(key, 5)
+        X = jax.random.normal(ks[0], (K, max_n, dim))
+        Y = jax.random.randint(ks[1], (K, max_n), 0, 4)
+        n = jnp.full((K,), max_n, jnp.int32)
+        membership = jnp.asarray([i % m for i in range(K)])
+        keys = jax.random.split(ks[2], K)
+        return model, gp, membership, X, Y, n, keys, m
+
+    def test_round_shapes_and_finiteness(self):
+        model, gp, mem, X, Y, n, keys, m = self._setup()
+        rf = fp.make_parallel_round(model, epochs=2, batch_size=5, lr=0.05,
+                                    mu=0.0, n_groups=m, max_samples=20)
+        new_gp, global_p, deltas = jax.jit(rf)(gp, mem, X, Y, n, keys)
+        for leaf in jax.tree_util.tree_leaves(new_gp):
+            assert leaf.shape[0] == m
+            assert np.all(np.isfinite(np.asarray(leaf)))
+        for leaf in jax.tree_util.tree_leaves(global_p):
+            assert np.all(np.isfinite(np.asarray(leaf)))
+
+    def test_groups_move_independently(self):
+        """Clients of group j only influence group j's parameters."""
+        model, gp, mem, X, Y, n, keys, m = self._setup()
+        rf = fp.make_parallel_round(model, epochs=2, batch_size=5, lr=0.05,
+                                    mu=0.0, n_groups=m, max_samples=20)
+        new1, _, _ = rf(gp, mem, X, Y, n, keys)
+        # perturb ONLY group-0 clients' data
+        X2 = X.at[0].add(10.0)
+        new2, _, _ = rf(gp, mem, X2, Y, n, keys)
+        w1 = np.asarray(new1["w"])
+        w2 = np.asarray(new2["w"])
+        assert not np.allclose(w1[0], w2[0])          # group 0 changed
+        np.testing.assert_allclose(w1[1], w2[1])      # group 1 untouched
+        np.testing.assert_allclose(w1[2], w2[2])
+
+    def test_global_is_group_mean(self):
+        model, gp, mem, X, Y, n, keys, m = self._setup()
+        rf = fp.make_parallel_round(model, epochs=1, batch_size=5, lr=0.05,
+                                    mu=0.0, n_groups=m, max_samples=20)
+        new_gp, global_p, _ = rf(gp, mem, X, Y, n, keys)
+        want = jax.tree_util.tree_map(lambda g: jnp.mean(g, 0), new_gp)
+        for a, b in zip(jax.tree_util.tree_leaves(global_p),
+                        jax.tree_util.tree_leaves(want)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+
+    def test_empty_group_unchanged(self):
+        model, gp, mem, X, Y, n, keys, m = self._setup()
+        mem = jnp.zeros_like(mem)                     # everyone in group 0
+        rf = fp.make_parallel_round(model, epochs=1, batch_size=5, lr=0.05,
+                                    mu=0.0, n_groups=m, max_samples=20)
+        new_gp, _, _ = rf(gp, mem, X, Y, n, keys)
+        np.testing.assert_allclose(np.asarray(new_gp["w"][1]),
+                                   np.asarray(gp["w"][1]))
+        assert not np.allclose(np.asarray(new_gp["w"][0]),
+                               np.asarray(gp["w"][0]))
+
+    def test_proximal_term_shrinks_delta(self):
+        model, gp, mem, X, Y, n, keys, m = self._setup()
+        plain = fp.make_parallel_round(model, epochs=3, batch_size=5, lr=0.1,
+                                       mu=0.0, n_groups=m, max_samples=20)
+        prox = fp.make_parallel_round(model, epochs=3, batch_size=5, lr=0.1,
+                                      mu=1.0, n_groups=m, max_samples=20)
+        _, _, d0 = plain(gp, mem, X, Y, n, keys)
+        _, _, d1 = prox(gp, mem, X, Y, n, keys)
+        n0 = float(sum(jnp.sum(jnp.square(l))
+                       for l in jax.tree_util.tree_leaves(d0)))
+        n1 = float(sum(jnp.sum(jnp.square(l))
+                       for l in jax.tree_util.tree_leaves(d1)))
+        assert n1 < n0
+
+
+class TestDistributedColdStart:
+    def test_kmeans_step_reduces_inertia(self):
+        key = jax.random.PRNGKey(1)
+        E = jnp.concatenate([jax.random.normal(key, (10, 3)) + 4,
+                             jax.random.normal(jax.random.fold_in(key, 1),
+                                               (10, 3)) - 4])
+        centers = E[:2]
+        def inertia(c):
+            d2 = jnp.sum(jnp.square(E[:, None] - c[None]), -1)
+            return float(jnp.sum(jnp.min(d2, 1)))
+        i0 = inertia(centers)
+        for _ in range(5):
+            assign, centers = fp.kmeans_step(E, centers)
+        assert inertia(centers) < i0
+
+    def test_full_coldstart_pipeline_recovers_clusters(self):
+        key = jax.random.PRNGKey(2)
+        dirs = jax.random.normal(key, (3, 500))
+        dW = jnp.concatenate([
+            dirs[i] + 0.05 * jax.random.normal(jax.random.fold_in(key, i),
+                                               (8, 500)) for i in range(3)])
+        E, V = fp.edc_embedding_distributed(dW, 3, key=key,
+                                            qr_impl="cholesky")
+        centers = E[jnp.asarray([0, 8, 16])]
+        for _ in range(10):
+            assign, centers = fp.kmeans_step(E, centers)
+        a = np.asarray(assign)
+        # each true cluster maps to a single label
+        for g in range(3):
+            block = a[g * 8:(g + 1) * 8]
+            assert len(np.unique(block)) == 1
+        assert len(np.unique(a)) == 3

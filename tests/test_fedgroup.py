@@ -1,0 +1,136 @@
+"""FedGroup core behaviour (Algorithms 2-3, eq. 9, convergence bound)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fedgroup import FedGroupTrainer, FedGrouProxTrainer
+from repro.fed.engine import FedAvgTrainer, FedConfig
+from repro.fed import server as server_lib
+
+
+class TestGroupColdStart:
+    def test_assigns_pretrain_clients(self, tiny_model, tiny_fed_data, fast_cfg):
+        tr = FedGroupTrainer(tiny_model, tiny_fed_data, fast_cfg)
+        pre_idx, labels = tr.group_cold_start()
+        assert len(pre_idx) == fast_cfg.pretrain_scale * fast_cfg.n_groups
+        assert np.all(tr.membership[pre_idx] >= 0)
+        assert set(np.unique(labels)) <= set(range(fast_cfg.n_groups))
+
+    def test_group_models_differ_after_coldstart(self, tiny_model,
+                                                 tiny_fed_data, fast_cfg):
+        tr = FedGroupTrainer(tiny_model, tiny_fed_data, fast_cfg)
+        tr.group_cold_start()
+        flats = [np.asarray(jnp.concatenate([jnp.ravel(l) for l in
+                 jax.tree_util.tree_leaves(p)])) for p in tr.group_params]
+        occupied = [j for j in range(tr.m)
+                    if (tr.membership == j).sum() > 0]
+        assert len(occupied) >= 2
+        for i in occupied:
+            for j in occupied:
+                if i < j:
+                    assert not np.allclose(flats[i], flats[j])
+
+    def test_madc_branch(self, tiny_model, tiny_fed_data, fast_cfg):
+        cfg = FedConfig(**{**fast_cfg.__dict__, "measure": "madc"})
+        tr = FedGroupTrainer(tiny_model, tiny_fed_data, cfg)
+        pre_idx, labels = tr.group_cold_start()
+        assert np.all(tr.membership[pre_idx] >= 0)
+
+
+class TestClientColdStart:
+    def test_newcomers_assigned(self, tiny_model, tiny_fed_data, fast_cfg):
+        tr = FedGroupTrainer(tiny_model, tiny_fed_data, fast_cfg)
+        tr.group_cold_start()
+        cold = np.where(tr.membership < 0)[0][:8]
+        tr.client_cold_start(cold)
+        assert np.all(tr.membership[cold] >= 0)
+
+    def test_membership_static_across_rounds(self, tiny_model, tiny_fed_data,
+                                             fast_cfg):
+        tr = FedGroupTrainer(tiny_model, tiny_fed_data, fast_cfg)
+        tr.round(0)
+        before = tr.membership.copy()
+        tr.round(1)
+        assigned = before >= 0
+        # once assigned, membership never changes (static grouping)
+        np.testing.assert_array_equal(tr.membership[assigned], before[assigned])
+
+    def test_rac_ablation_assigns_randomly(self, tiny_model, tiny_fed_data,
+                                           fast_cfg):
+        cfg = FedConfig(**{**fast_cfg.__dict__, "rac": True})
+        tr = FedGroupTrainer(tiny_model, tiny_fed_data, cfg)
+        tr.group_cold_start()
+        cold = np.where(tr.membership < 0)[0][:20]
+        tr.client_cold_start(cold)
+        assert np.all(tr.membership[cold] >= 0)
+
+
+class TestInterGroupAggregation:
+    def test_eq20(self):
+        """w̃_g = w_g + η Σ_{l≠g} w_l / ||w_l|| — exact check on vectors."""
+        ps = [{"w": jnp.ones((3,)) * (i + 1)} for i in range(3)]
+        eta = 0.5
+        out = server_lib.inter_group_aggregate(ps, eta)
+        for g in range(3):
+            expect = np.asarray(ps[g]["w"], np.float64).copy()
+            for l in range(3):
+                if l != g:
+                    wl = np.asarray(ps[l]["w"], np.float64)
+                    expect += eta * wl / np.linalg.norm(wl)
+            np.testing.assert_allclose(np.asarray(out[g]["w"]), expect,
+                                       rtol=1e-5)
+
+    def test_eta_zero_identity(self):
+        ps = [{"w": jnp.arange(4.0) + i} for i in range(2)]
+        out = server_lib.inter_group_aggregate(ps, 0.0)
+        for a, b in zip(ps, out):
+            np.testing.assert_allclose(a["w"], b["w"])
+
+
+class TestFedGroupTraining:
+    def test_beats_fedavg_on_label_skew(self, tiny_model, tiny_fed_data,
+                                        fast_cfg):
+        """Paper Table 3 headline: CFL > consensus FL under label skew."""
+        fa = FedAvgTrainer(tiny_model, tiny_fed_data, fast_cfg)
+        fg = FedGroupTrainer(tiny_model, tiny_fed_data, fast_cfg)
+        ha = fa.run(4)
+        hg = fg.run(4)
+        assert hg.max_acc > ha.max_acc + 0.03
+
+    def test_fedgrouprox_runs(self, tiny_model, tiny_fed_data, fast_cfg):
+        tr = FedGrouProxTrainer(tiny_model, tiny_fed_data, fast_cfg)
+        assert tr.cfg.mu > 0
+        h = tr.run(2)
+        assert 0.0 <= h.max_acc <= 1.0
+
+    def test_eta_g_semi_pluralistic(self, tiny_model, tiny_fed_data, fast_cfg):
+        cfg = FedConfig(**{**fast_cfg.__dict__, "eta_g": 0.01})
+        tr = FedGroupTrainer(tiny_model, tiny_fed_data, cfg)
+        h = tr.run(2)
+        assert np.isfinite(h.max_acc)
+
+
+class TestConvergenceBound:
+    def test_divergence_grows_with_E(self, tiny_model, tiny_fed_data):
+        """Lemma 2 (qualitative): the bound (δ/L)((ηL+1)^E − 1) grows with E;
+        the measured client-group divergence after local training should too."""
+        discs = []
+        for E in (1, 5, 20):
+            cfg = FedConfig(n_rounds=1, clients_per_round=10, local_epochs=E,
+                            batch_size=10, lr=0.05, n_groups=3,
+                            pretrain_scale=4, seed=0)
+            tr = FedAvgTrainer(tiny_model, tiny_fed_data, cfg)
+            m = tr.round(0)
+            discs.append(m.discrepancy)
+        assert discs[0] < discs[1] < discs[2], discs
+
+    def test_bound_formula_monotone(self):
+        """The closed-form bound itself: monotone in E, δ, η_G, |G|."""
+        def bound(delta, M, L, eta, E, eta_g=0.0, G=1):
+            return delta * M / L * ((eta * L + 1) ** E - 1) + eta_g * (G - 1)
+        assert bound(1, 1, 1, 0.1, 20) > bound(1, 1, 1, 0.1, 5)
+        assert bound(2, 1, 1, 0.1, 5) > bound(1, 1, 1, 0.1, 5)
+        assert bound(1, 1, 1, 0.1, 5, 0.1, 3) > bound(1, 1, 1, 0.1, 5, 0.0, 3)
+        # eq. 22 degrades to eq. 19 when eta_g = 0 or |G| = 1
+        assert bound(1, 1, 1, 0.1, 5, 0.5, 1) == bound(1, 1, 1, 0.1, 5)

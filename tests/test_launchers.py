@@ -1,0 +1,58 @@
+"""Launcher CLIs (train/serve) exercised in-process with tiny settings."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.launch import serve, train
+
+
+class TestTrainCLI:
+    def test_fed_mode(self, tmp_path, capsys):
+        rc = train.main([
+            "--mode", "fed", "--framework", "fedgroup", "--dataset",
+            "synthetic", "--rounds", "2", "--k", "6", "--epochs", "2",
+            "--groups", "2", "--alpha", "2", "--clients", "20",
+            "--out", str(tmp_path)])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "max_acc=" in out
+        assert os.path.exists(tmp_path / "model.npz")
+        assert os.path.exists(tmp_path / "history.json")
+
+    def test_lm_mode(self, tmp_path, capsys):
+        rc = train.main([
+            "--mode", "lm", "--arch", "gemma-2b", "--smoke", "--steps", "3",
+            "--batch", "2", "--seq", "16", "--out", str(tmp_path)])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "loss=" in out
+        assert os.path.exists(tmp_path / "state.npz")
+
+    def test_fed_madc_measure(self, capsys):
+        rc = train.main([
+            "--mode", "fed", "--framework", "fedgroup", "--dataset",
+            "synthetic", "--rounds", "1", "--k", "4", "--epochs", "1",
+            "--groups", "2", "--alpha", "2", "--clients", "12",
+            "--measure", "madc"])
+        assert rc == 0
+
+
+class TestServeCLI:
+    def test_dense_decode(self, capsys):
+        rc = serve.main(["--arch", "gemma-2b", "--smoke", "--batch", "2",
+                         "--prompt-len", "4", "--gen", "4",
+                         "--temperature", "0"])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "tok/s" in out
+
+    def test_windowed_decode(self, capsys):
+        rc = serve.main(["--arch", "glm4-9b", "--smoke", "--batch", "1",
+                         "--prompt-len", "4", "--gen", "4", "--window", "8"])
+        assert rc == 0
+
+    def test_encoder_only_refuses(self, capsys):
+        rc = serve.main(["--arch", "hubert-xlarge", "--smoke"])
+        assert rc == 1
+        assert "encoder-only" in capsys.readouterr().out

@@ -1,0 +1,92 @@
+"""Optimizers + checkpoint I/O."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import load_metadata, load_pytree, save_pytree
+from repro.optim import (adamw_init, adamw_update, cosine_schedule,
+                         momentum_init, momentum_update, proximal_grad,
+                         sgd_update)
+
+
+class TestOptimizers:
+    def test_sgd_matches_formula(self):
+        p = {"w": jnp.array([1.0, 2.0])}
+        g = {"w": jnp.array([0.5, -1.0])}
+        out = sgd_update(p, g, 0.1)
+        np.testing.assert_allclose(out["w"], [0.95, 2.1])
+
+    def test_momentum_accumulates(self):
+        p = {"w": jnp.zeros(2)}
+        g = {"w": jnp.ones(2)}
+        v = momentum_init(p)
+        p, v = momentum_update(p, g, v, lr=1.0, beta=0.9)
+        p, v = momentum_update(p, g, v, lr=1.0, beta=0.9)
+        np.testing.assert_allclose(v["w"], 1.9)     # 1 + 0.9*1
+        np.testing.assert_allclose(p["w"], -2.9)    # -(1) - (1.9)
+
+    def test_adamw_first_step_is_lr_sized(self):
+        p = {"w": jnp.array([0.0])}
+        g = {"w": jnp.array([3.0])}
+        opt = adamw_init(p)
+        p2, opt = adamw_update(p, g, opt, lr=0.1, weight_decay=0.0)
+        # bias-corrected first step: update == sign(g) * lr
+        np.testing.assert_allclose(p2["w"], [-0.1], atol=1e-5)
+
+    def test_adamw_weight_decay_shrinks(self):
+        p = {"w": jnp.array([10.0])}
+        g = {"w": jnp.array([0.0])}
+        opt = adamw_init(p)
+        p2, _ = adamw_update(p, g, opt, lr=0.1, weight_decay=0.1)
+        assert float(p2["w"][0]) < 10.0
+
+    def test_proximal_grad(self):
+        p = {"w": jnp.array([2.0])}
+        a = {"w": jnp.array([1.0])}
+        g = proximal_grad(p, a, mu=0.5)
+        np.testing.assert_allclose(g["w"], [0.5])
+
+    def test_cosine_schedule(self):
+        assert float(cosine_schedule(0, base_lr=1.0, warmup=10, total=100)) == 0.0
+        assert float(cosine_schedule(10, base_lr=1.0, warmup=10, total=100)) \
+            == pytest.approx(1.0, abs=1e-5)
+        end = float(cosine_schedule(100, base_lr=1.0, warmup=10, total=100))
+        assert end == pytest.approx(0.1, abs=1e-5)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        key = jax.random.PRNGKey(0)
+        tree = {"layers": {"w": jax.random.normal(key, (4, 4)),
+                           "b": jnp.zeros(4)},
+                "step": jnp.array(7, jnp.int32)}
+        p = str(tmp_path / "ck.npz")
+        save_pytree(p, tree, {"round": 3, "acc": 0.9})
+        back = load_pytree(p, tree)
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        meta = load_metadata(p)
+        assert meta == {"round": 3, "acc": 0.9}
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        p = str(tmp_path / "ck.npz")
+        save_pytree(p, {"w": jnp.zeros((2, 2))})
+        with pytest.raises(ValueError):
+            load_pytree(p, {"w": jnp.zeros((3, 3))})
+
+    def test_model_state_roundtrip(self, tmp_path):
+        from repro.configs import registry
+        from repro.models import zoo
+        cfg = registry.smoke_variant(registry.get("gemma-2b"))
+        state = zoo.init_train_state(jax.random.PRNGKey(0), cfg)
+        p = str(tmp_path / "state.npz")
+        save_pytree(p, state, {"arch": cfg.name})
+        back = load_pytree(p, state)
+        assert load_metadata(p)["arch"] == "gemma-2b"
+        for a, b in zip(jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

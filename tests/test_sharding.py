@@ -1,0 +1,101 @@
+"""Sharding-spec sanity for every full architecture config (no mesh needed:
+pure spec/rank/divisibility checks via eval_shape — no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry, shapes as shp
+from repro.models import zoo
+from repro.sharding import specs as sh
+
+ARCHS = sorted(registry.ARCHS)
+
+
+def _axis_sizes():
+    return {"model": 16, "data": 16, "pod": 2}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_specs_rank_and_divisibility(arch):
+    cfg = registry.get(arch)
+    params = jax.eval_shape(lambda: zoo.init_params(jax.random.PRNGKey(0), cfg))
+    spec_tree = sh.param_specs(params, cfg)
+    sizes = _axis_sizes()
+
+    leaves_p = jax.tree_util.tree_leaves(params)
+    leaves_s = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves_p) == len(leaves_s)
+    for leaf, spec in zip(leaves_p, leaves_s):
+        assert len(spec) <= leaf.ndim, (leaf.shape, spec)
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = int(np.prod([sizes[a] for a in axes]))
+            assert dim % total == 0, (arch, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_fsdp_specs_divisible(arch):
+    cfg = registry.get(arch)
+    params = jax.eval_shape(lambda: zoo.init_params(jax.random.PRNGKey(0), cfg))
+    spec_tree = sh.param_specs(params, cfg, fsdp_axis="data")
+    sizes = _axis_sizes()
+    for leaf, spec in zip(
+            jax.tree_util.tree_leaves(params),
+            jax.tree_util.tree_leaves(spec_tree,
+                                      is_leaf=lambda x: isinstance(x, P))):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = int(np.prod([sizes[a] for a in axes]))
+            assert dim % total == 0, (arch, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v3-671b", "granite-moe-1b-a400m"])
+def test_moe_experts_sharded(arch):
+    cfg = registry.get(arch)
+    params = jax.eval_shape(lambda: zoo.init_params(jax.random.PRNGKey(0), cfg))
+    spec_tree = sh.param_specs(params, cfg)
+    moe_spec = spec_tree["blocks"]["moe"]["w_up"]
+    # stacked layer dim None, then expert axis on "model"
+    assert tuple(moe_spec) == (None, "model", None, None)
+
+
+def test_decode_specs_window_shrinks_cache():
+    cfg = registry.get("gemma-2b")
+    long_cfg = shp.config_for(cfg, shp.SHAPES["long_500k"])
+    assert long_cfg.window == shp.LONG_CONTEXT_WINDOW
+    ins = shp.decode_specs(long_cfg, shp.SHAPES["long_500k"])
+    assert ins["cache"]["k"].shape[2] == shp.LONG_CONTEXT_WINDOW
+    full = shp.decode_specs(cfg, shp.SHAPES["decode_32k"])
+    assert full["cache"]["k"].shape[2] == 32768
+
+
+@pytest.mark.parametrize("shape_name", list(shp.SHAPES))
+def test_supported_matrix(shape_name):
+    """The 40-pair support matrix: only hubert decode shapes skip."""
+    shape = shp.SHAPES[shape_name]
+    for arch in ARCHS:
+        ok, why = shp.supported(registry.get(arch), shape)
+        if arch == "hubert-xlarge" and shape.kind == "decode":
+            assert not ok
+        else:
+            assert ok, (arch, shape_name, why)
+
+
+def test_batch_spec_replicates_indivisible():
+    """long_500k (B=1) cannot shard over 16 data ways -> replicated."""
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    tree = {"tokens": jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            "big": jax.ShapeDtypeStruct((256, 8), jnp.float32)}
+    specs = sh.data_specs(tree, FakeMesh())
+    assert tuple(specs["tokens"]) == (None, None)
+    # PartitionSpec normalizes a 1-tuple axis to the bare name
+    assert specs["big"] == P(("data",), None) or specs["big"] == P("data", None)

@@ -1,0 +1,67 @@
+"""End-to-end behaviour tests for the full system (paper-level claims)."""
+import numpy as np
+import pytest
+
+from repro.core.fedgroup import FedGroupTrainer
+from repro.fed.engine import FedAvgTrainer, FedConfig
+
+
+class TestPaperClaims:
+    def test_table1_heterogeneity_trend(self, tiny_model):
+        """Table 1: more classes/client (less heterogeneity) -> higher max
+        accuracy."""
+        from repro.data.generators import mnist_like
+        results = {}
+        for cpc in (1, 5, 10):
+            data = mnist_like(seed=0, n_clients=60, classes_per_client=cpc,
+                              total_train=4000, dim=32)
+            cfg = FedConfig(n_rounds=5, clients_per_round=10, local_epochs=5,
+                            batch_size=10, lr=0.05, seed=0)
+            tr = FedAvgTrainer(tiny_model, data, cfg)
+            h = tr.run()
+            results[cpc] = (h.max_acc,
+                            float(np.var([r.discrepancy for r in h.rounds])))
+        assert results[10][0] > results[1][0]          # IID best accuracy
+
+    def test_rcc_ablation_between_random_and_full(self, tiny_model,
+                                                  tiny_fed_data, fast_cfg):
+        """Table 3 ablation: RCC (random centres) degrades vs full FedGroup."""
+        full = FedGroupTrainer(tiny_model, tiny_fed_data, fast_cfg).run(4)
+        rcc_cfg = FedConfig(**{**fast_cfg.__dict__, "rcc": True})
+        rcc = FedGroupTrainer(tiny_model, tiny_fed_data, rcc_cfg).run(4)
+        # RCC should not beat proper clustering (allow small noise margin)
+        assert rcc.max_acc <= full.max_acc + 0.05
+
+    def test_fedgroup_converges_faster_than_fedavg(self, tiny_model,
+                                                   tiny_fed_data, fast_cfg):
+        """Fig. 3: FedGroup reaches a given accuracy in fewer rounds."""
+        fa = FedAvgTrainer(tiny_model, tiny_fed_data, fast_cfg).run(4)
+        fg = FedGroupTrainer(tiny_model, tiny_fed_data, fast_cfg).run(4)
+        target = 0.55
+        ra = fa.rounds_to_reach(target)
+        rg = fg.rounds_to_reach(target)
+        assert rg is not None
+        assert ra is None or rg <= ra
+
+
+class TestFrameworkContracts:
+    def test_all_trainers_share_interface(self, tiny_model, tiny_fed_data,
+                                          fast_cfg):
+        from repro.fed.fesem import FeSEMTrainer
+        from repro.fed.ifca import IFCATrainer
+        for cls in (FedAvgTrainer, FedGroupTrainer, IFCATrainer, FeSEMTrainer):
+            tr = cls(tiny_model, tiny_fed_data, fast_cfg)
+            m = tr.round(0)
+            assert 0 <= m.weighted_acc <= 1
+            assert m.discrepancy >= 0
+            assert tr.framework
+
+    def test_empty_group_round_survives(self, tiny_model, tiny_fed_data):
+        """A round where some group has no selected clients must not crash
+        (Algorithm 2 line 13: empty group keeps its parameters)."""
+        cfg = FedConfig(n_rounds=1, clients_per_round=2, local_epochs=2,
+                        batch_size=5, lr=0.05, n_groups=5, pretrain_scale=2,
+                        seed=0)
+        tr = FedGroupTrainer(tiny_model, tiny_fed_data, cfg)
+        m = tr.round(0)
+        assert np.isfinite(m.weighted_acc)
