@@ -1,0 +1,80 @@
+"""Machine-readable benchmark persistence + regression gating.
+
+Each bench entry that tracks a perf trajectory appends its metrics to a
+BENCH_*.json file at the repo root:
+
+    {"runs": [{..metrics.., "timestamp": ...}, ...]}
+
+``record_run`` compares the fresh metrics against the committed trajectory
+and flags a regression when a watched metric moved more than ``factor``× in
+the bad direction. Two properties keep the gate honest:
+
+  * the reference is the BEST recorded value of each watched metric (within
+    the kept window), not merely the previous run — so a slow drift of
+    <factor per run still trips once it compounds past factor overall;
+  * regressed runs are NOT appended — the committed baseline stays
+    authoritative and a red CI run stays red on retry instead of comparing
+    the regression against itself.
+
+Only runs from the same mode (``quick`` flag) are compared, since reduced
+scales measure different operating points. Ratio-style metrics (speedups)
+are preferred for the watched keys because they are stable across machines,
+unlike raw wall times. To accept an intentional perf change, delete the
+stale runs from the BENCH file (or the file itself) and re-run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_KEEP_RUNS = 20
+
+
+def _load(path):
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        if isinstance(data, dict) and isinstance(data.get("runs"), list):
+            return data
+    except (OSError, ValueError):
+        pass
+    return {"runs": []}
+
+
+def record_run(filename: str, metrics: dict, *, watch=(), factor: float = 2.0):
+    """Record ``metrics`` in BENCH file ``filename`` (repo root).
+
+    watch: iterable of (key, direction) with direction "min" (regression when
+    the value shrank by > factor, e.g. a speedup) or "max" (regression when
+    it grew by > factor, e.g. a wall time). The reference value per key is
+    the best same-mode recorded value; the run is appended only when it does
+    not regress. Returns (regression, details).
+    """
+    path = os.path.join(REPO_ROOT, filename)
+    data = _load(path)
+    same_mode = [r for r in data["runs"]
+                 if r.get("quick") == metrics.get("quick")]
+
+    regression, details = False, []
+    for key, direction in watch:
+        b = metrics.get(key)
+        history = [r[key] for r in same_mode
+                   if isinstance(r.get(key), (int, float)) and r[key] > 0]
+        if not (history and isinstance(b, (int, float)) and b > 0):
+            continue
+        a = max(history) if direction == "min" else min(history)
+        bad = (b < a / factor) if direction == "min" else (b > a * factor)
+        if bad:
+            regression = True
+            details.append(f"{key}: best {a:.3g} -> {b:.3g} "
+                           f"(>{factor}x {direction}-regression)")
+    if not regression:
+        data["runs"] = (data["runs"]
+                        + [{**metrics, "timestamp": round(time.time(), 1)}]
+                        )[-_KEEP_RUNS:]
+        with open(path, "w") as f:
+            json.dump(data, f, indent=1)
+            f.write("\n")
+    return regression, details

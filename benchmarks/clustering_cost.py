@@ -2,8 +2,15 @@
 
 Pairwise-cosine/MADC cost O(n² d_w) vs EDC O(m² d_w) (+randomized SVD).
 Measures wall time for growing d_w at fixed n (pre-training clients) and
-reports the derived FLOP counts. Also times the fused Pallas cosine kernel
-in interpret mode (correctness path; on-TPU numbers come from the roofline).
+reports the derived FLOP counts. Also times the fused Pallas kernels in
+interpret mode (correctness path; on-TPU numbers come from the roofline):
+the EDC cosine block and the blocked MADC kernel vs the O(n³)-broadcast
+reference, with the analytic peak-memory model showing the kernel's working
+set is independent of n while the reference grows as n³.
+
+Results (including the MADC kernel-vs-reference trajectory) persist to
+BENCH_clustering.json; a >2x drop of the blocked kernel's relative speed vs
+the committed baseline flags a regression (exit gate in benchmarks/run.py).
 """
 from __future__ import annotations
 
@@ -13,8 +20,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.bench_io import record_run
 from repro.core import measures
 from repro.core.svd import randomized_truncated_svd
+
+_MADC_BLOCK_N = 128
+_MADC_BLOCK_Z = 128
+_MADC_SUB_N = 8
 
 
 def _time(fn, *args, reps=3):
@@ -23,6 +35,17 @@ def _time(fn, *args, reps=3):
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def _madc_memory_model(n: int) -> dict:
+    """Peak transient bytes (fp32): the reference materializes the (n, n, n)
+    |M_iz − M_jz| cube; the blocked kernel holds two (bn, bz) tiles, a
+    (bn, bn) accumulator, and a (sub, bn, bz) broadcast chunk — constant."""
+    ref = 4 * n * n * n
+    kern = 4 * (2 * _MADC_BLOCK_N * _MADC_BLOCK_Z
+                + _MADC_BLOCK_N * _MADC_BLOCK_N
+                + _MADC_SUB_N * _MADC_BLOCK_N * _MADC_BLOCK_Z)
+    return {"n": n, "ref_peak_bytes": ref, "kernel_tile_bytes": kern}
 
 
 def main(quick: bool = False):
@@ -52,7 +75,46 @@ def main(quick: bool = False):
               f"{f_pair:>14.2e} {f_edc:>11.2e}")
         rows.append({"d_w": d, "pairwise_us": t_pair, "madc_us": t_madc,
                      "edc_us": t_edc})
-    return rows
+
+    # -- blocked MADC kernel vs the O(n³) reference ------------------------
+    sizes = [32, 64] if quick else [32, 64, 96, 128]
+    print("\n# MADC: blocked Pallas kernel (interpret) vs (n,n,n) reference")
+    print(f"{'n':>5} {'ref_us':>10} {'kernel_us':>10} "
+          f"{'ref_peak_bytes':>15} {'kernel_tile_bytes':>18}")
+    kern_rows = []
+    ref_j = jax.jit(measures.madc)
+    kern_j = lambda M: measures.madc(M, use_kernel=True)
+    for nn in sizes:
+        W = jax.random.normal(jax.random.fold_in(key, nn), (nn, 256))
+        M = jax.block_until_ready(measures.cosine_similarity_matrix(W))
+        t_ref = _time(ref_j, M)
+        t_kern = _time(kern_j, M)
+        mem = _madc_memory_model(nn)
+        print(f"{nn:>5} {t_ref:>10.0f} {t_kern:>10.0f} "
+              f"{mem['ref_peak_bytes']:>15} {mem['kernel_tile_bytes']:>18}")
+        kern_rows.append({**mem, "ref_us": t_ref, "kernel_us": t_kern})
+    # kernel_tile_bytes comes from the analytic model (block constants only,
+    # no n term) — the measured counterpart is the on-TPU roofline's job; the
+    # ref column is exact (jnp really allocates the (n, n, n) cube)
+    tile_bytes = kern_rows[0]["kernel_tile_bytes"]
+
+    # relative speed is machine-stable; raw interpret-mode wall time is not
+    largest = kern_rows[-1]
+    rel = largest["ref_us"] / max(largest["kernel_us"], 1e-9)
+    metrics = {
+        "quick": quick,
+        "measure_cost": rows,
+        "madc_kernel": kern_rows,
+        "madc_kernel_rel_speed": rel,
+        "kernel_tile_bytes": tile_bytes,
+    }
+    regression, details = record_run(
+        "BENCH_clustering.json", metrics,
+        watch=[("madc_kernel_rel_speed", "min")])
+    if regression:
+        print("REGRESSION:", "; ".join(details))
+    return {"rows": len(rows), "madc_rel_speed": round(rel, 3),
+            "regression": regression}
 
 
 if __name__ == "__main__":

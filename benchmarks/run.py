@@ -9,10 +9,18 @@
 ``python -m benchmarks.run``          — full run
 ``python -m benchmarks.run --quick``  — reduced scales (CI-sized)
 ``python -m benchmarks.run --only table3,fig5``
+``python -m benchmarks.run --json out.json``  — machine-readable results
+
+Exit status is nonzero when a bench fails OR when a bench reports a perf
+regression >2x against its committed BENCH_*.json baseline (cost and table3
+watch the MADC-kernel relative speed and the round-executor speedup):
+
+``python -m benchmarks.run --quick --only cost,table3``  — the CI perf gate
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -37,26 +45,39 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(BENCHES))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write every bench's derived metrics to PATH")
     args = ap.parse_args(argv)
 
     names = list(BENCHES) if not args.only else args.only.split(",")
     print("name,us_per_call,derived")
     rc = 0
+    report = {}
     for name in names:
         t0 = time.perf_counter()
         try:
             derived = BENCHES[name](quick=args.quick)
         except Exception as e:  # noqa: BLE001
             print(f"{name},FAILED,{type(e).__name__}: {e}")
+            report[name] = {"error": f"{type(e).__name__}: {e}"}
             rc = 1
             continue
         us = (time.perf_counter() - t0) * 1e6
         short = ""
         if isinstance(derived, dict):
             short = ";".join(f"{k}={v}" for k, v in list(derived.items())[:3])
+            if derived.get("regression"):
+                short = "REGRESSION;" + short
+                rc = 1
         elif isinstance(derived, list):
             short = f"rows={len(derived)}"
+        report[name] = {"us_per_call": us, "derived": derived}
         print(f"{name},{us:.0f},{short}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1, default=str)
+            f.write("\n")
+        print(f"# wrote {args.json}")
     return rc
 
 

@@ -3,15 +3,25 @@
 FedAvg / FedProx / IFCA / FeSEM / FedGroup(EDC|MADC) / FedGrouProx /
 ablations (RCC, RAC) on the synthetic stand-ins for the paper's datasets.
 Reports max ("early-stopping") weighted accuracy, as in §5.1.
+
+Also times the single-dispatch round executor against the seed per-group
+loop (m=5 groups, K=50 clients — the framework-comparison scale) and
+persists the trajectory to BENCH_round_exec.json; a >2x speedup loss vs the
+committed baseline flags a regression (exit gate in benchmarks/run.py).
 """
 from __future__ import annotations
 
 import time
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.bench_io import record_run
 from repro.core.fedgroup import FedGrouProxTrainer, FedGroupTrainer
 from repro.data import generators as gen
+from repro.fed import client as client_lib
+from repro.fed import rounds
 from repro.fed.engine import FedAvgTrainer, FedConfig, FedProxTrainer
 from repro.fed.fesem import FeSEMTrainer
 from repro.fed.ifca import IFCATrainer
@@ -53,6 +63,64 @@ def _frameworks(m: int):
     }
 
 
+def round_executor_bench(quick: bool = False, *, m: int = 5, K: int = 50):
+    """Single fused dispatch vs the seed per-group loop, same keys/data."""
+    dim, max_n, epochs, batch = 32, 20, 2, 10
+    model = mclr(dim, 10)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    gp_list = [jax.tree_util.tree_map(lambda l, j=j: l + 0.01 * j, params)
+               for j in range(m)]
+    ks = jax.random.split(key, 3)
+    X = jax.random.normal(ks[0], (K, max_n, dim))
+    Y = jax.random.randint(ks[1], (K, max_n), 0, 10)
+    n = jnp.full((K,), max_n, jnp.int32)
+    membership = np.arange(K) % m
+    keys = jax.random.split(ks[2], K)
+
+    fused = jax.jit(rounds.make_round_executor(
+        model, epochs=epochs, batch_size=batch, lr=0.05, mu=0.0, n_groups=m,
+        max_samples=max_n, eta_g=0.0))
+    solver = client_lib.make_batch_solver(
+        model, epochs=epochs, batch_size=batch, lr=0.05, mu=0.0,
+        max_samples=max_n)
+    gp = rounds.stack_trees(gp_list)
+    mem_j = jnp.asarray(membership, jnp.int32)
+
+    def run_fused():
+        jax.block_until_ready(
+            fused(gp, mem_j, X, Y, n, keys).group_params)
+
+    def run_serial():
+        out = rounds.serial_reference_round(
+            solver, gp_list, membership, X, Y, n, keys)
+        jax.block_until_ready(out[2])
+
+    run_fused(), run_serial()                           # compile both paths
+    reps = 3 if quick else 10
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        run_fused()
+    fused_us = (time.perf_counter() - t0) / reps * 1e6
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        run_serial()
+    serial_us = (time.perf_counter() - t0) / reps * 1e6
+
+    speedup = serial_us / max(fused_us, 1e-9)
+    print(f"\n# Round executor (m={m}, K={K}, E={epochs}): "
+          f"single-dispatch {fused_us:.0f}us vs seed loop {serial_us:.0f}us "
+          f"-> {speedup:.1f}x")
+    metrics = {"quick": quick, "m": m, "K": K, "epochs": epochs,
+               "fused_us": fused_us, "serial_us": serial_us,
+               "speedup": speedup}
+    regression, details = record_run(
+        "BENCH_round_exec.json", metrics, watch=[("speedup", "min")])
+    if regression:
+        print("REGRESSION:", "; ".join(details))
+    return {**metrics, "regression": regression}
+
+
 def main(quick: bool = False, n_rounds: int | None = None):
     n_rounds = n_rounds or (6 if quick else 12)
     results = {}
@@ -81,7 +149,11 @@ def main(quick: bool = False, n_rounds: int | None = None):
         rel = " ".join(f"{f}={row[f][2]/base:.2f}x" for f in
                        ("fedavg", "ifca", "fesem", "fg_edc"))
         print(f"  {dname}: {rel}")
-    return results
+
+    exec_bench = round_executor_bench(quick)
+    return {"round_exec_speedup": round(exec_bench["speedup"], 2),
+            "regression": exec_bench["regression"],
+            "table3": results, "round_exec": exec_bench}
 
 
 if __name__ == "__main__":

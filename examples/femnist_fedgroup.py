@@ -55,8 +55,9 @@ def main():
         }
         print(f"{name:>15}: max_acc={h.max_acc:.3f} "
               f"({report[name]['wall_s']}s)")
-        params = (tr.group_params[0] if hasattr(tr, "group_params")
-                  else tr.params)
+        from repro.fed.server import tree_index
+        params = (tree_index(tr.group_params, 0)
+                  if hasattr(tr, "group_params") else tr.params)
         save_pytree(os.path.join(args.out, f"{name}.npz"), params,
                     {"framework": name, "max_acc": h.max_acc})
     with open(os.path.join(args.out, "report.json"), "w") as f:

@@ -16,8 +16,15 @@ Key pieces, mapped to the paper:
 
 Group membership is *static* once assigned (the paper's main efficiency
 argument vs IFCA/FeSEM, which reschedule every round).
+
+Group state is an m-stacked pytree (leading axis = group) and every round is
+ONE device dispatch through ``fed.rounds.make_round_executor`` — the serial
+per-group solver loop of the seed implementation survives only as the
+equivalence/benchmark oracle ``fed.rounds.serial_reference_round``.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -38,14 +45,24 @@ class FedGroupTrainer(FedAvgTrainer):
         super().__init__(model, data, cfg)
         self.m = cfg.n_groups
         self.membership = np.full(data.n_clients, -1, np.int64)
-        self.group_params = [self.params for _ in range(self.m)]
-        self.group_delta = [None] * self.m          # latest Δw^(g), flattened
+        # group state: pytree stacked over the group axis + (m, d_w) latest
+        # flattened update direction Δw^(g)
+        self.group_params = jax.tree_util.tree_map(
+            lambda p: jnp.stack([p] * self.m), self.params)
+        self.group_delta = None
         # 1-epoch pre-training solver for newcomer cold start (the paper:
         # pre-training does not occupy a whole round)
         self.pretrain_solver = client_lib.make_batch_solver(
             model, epochs=1, batch_size=cfg.batch_size, lr=cfg.lr, mu=0.0,
             max_samples=data.x_train.shape[1])
         self.cold_started = False
+
+    def _exec_spec(self) -> dict:
+        return {"n_groups": self.m, "eta_g": self.cfg.eta_g}
+
+    def group_param(self, j: int):
+        """The j-th group's parameter pytree (view into the stacked state)."""
+        return server_lib.tree_index(self.group_params, j)
 
     # ------------------------------------------------------------------
     # Group cold start (Algorithm 3)
@@ -78,16 +95,22 @@ class FedGroupTrainer(FedAvgTrainer):
             raise ValueError(cfg.measure)
 
         self.membership[pre_idx] = labels
+        # segment mean over pre-trained clients: W[j, i] = 1/|G_j| for
+        # members, zero rows for empty groups (they stay at w0 with Δ = 0)
+        W = np.zeros((self.m, n_pre), np.float32)
         for j in range(self.m):
             members = np.where(labels == j)[0]
-            if len(members) == 0:                              # empty group:
-                self.group_params[j] = self.params             # stays at w0
-                self.group_delta[j] = jnp.zeros_like(dW[0])
-                continue
-            mean_delta = jax.tree_util.tree_map(
-                lambda d: jnp.mean(d[jnp.asarray(members)], axis=0), deltas)
-            self.group_params[j] = server_lib.apply_delta(self.params, mean_delta)
-            self.group_delta[j] = flatten_updates(mean_delta)
+            if len(members):
+                W[j, members] = 1.0 / len(members)
+        Wj = jnp.asarray(W)
+        mean_delta = jax.tree_util.tree_map(
+            lambda d: (Wj @ d.reshape(n_pre, -1)).reshape(
+                (self.m,) + d.shape[1:]), deltas)
+        self.group_params = jax.tree_util.tree_map(
+            lambda p, d: p[None] + d, self.params, mean_delta)
+        # flattening the already-aggregated per-leaf means equals Wj @ dW
+        # without a second pass over the (n_pre, d_w) update matrix
+        self.group_delta = jax.vmap(flatten_updates)(mean_delta)  # (m, d_w)
         self.cold_started = True
         return pre_idx, labels
 
@@ -107,16 +130,14 @@ class FedGroupTrainer(FedAvgTrainer):
         keys = jax.random.split(sk, len(cold_idx))
         deltas, _ = self.pretrain_solver(self.params, x, y, n, keys)
         dpre = jax.vmap(flatten_updates)(deltas)               # (c, d_w)
-        G = jnp.stack(self.group_delta)                        # (m, d_w)
-        sim = measures.cosine_similarity_matrix(dpre, G)       # (c, m)
-        dis = (-sim + 1.0) / 2.0
+        sim = measures.cosine_similarity_matrix(dpre, self.group_delta)
+        dis = (-sim + 1.0) / 2.0                               # (c, m)
         self.membership[cold_idx] = np.asarray(jnp.argmin(dis, axis=1))
 
     # ------------------------------------------------------------------
-    # Round (Algorithm 2)
+    # Round (Algorithm 2) — one fused dispatch over all groups
     # ------------------------------------------------------------------
     def round(self, t: int) -> RoundMetrics:
-        cfg = self.cfg
         if not self.cold_started:
             self.group_cold_start()
 
@@ -128,30 +149,19 @@ class FedGroupTrainer(FedAvgTrainer):
         # per-round: 1 group model down + 1 update up per client
         self.comm_params += 2 * len(idx) * self.model_size
 
-        tilde = list(self.group_params)
-        disc_sum, disc_n = 0.0, 0
-        for j in range(self.m):
-            members = idx[self.membership[idx] == j]
-            if len(members) == 0:                              # empty group
-                continue
-            deltas, finals, n = self._solve(self.group_params[j], members)
-            agg = server_lib.weighted_delta(deltas, n)
-            tilde[j] = server_lib.apply_delta(self.group_params[j], agg)
-            diffs = jax.vmap(lambda f: server_lib.tree_norm(
-                server_lib.tree_sub(f, tilde[j])))(finals)
-            disc_sum += float(jnp.sum(diffs))
-            disc_n += len(members)
-
-        new_group_params = server_lib.inter_group_aggregate(tilde, cfg.eta_g)
-        for j in range(self.m):
-            self.group_delta[j] = flatten_updates(server_lib.tree_sub(
-                new_group_params[j], self.group_params[j]))
-        self.group_params = new_group_params
+        x, y, n = self._client_batch(idx)
+        self.key, sk = jax.random.split(self.key)
+        keys = jax.random.split(sk, len(idx))
+        out = self._round_executor()(
+            self.group_params, jnp.asarray(self.membership[idx], jnp.int32),
+            x, y, n, keys)
+        self.group_params = out.group_params
+        self.group_delta = out.group_delta_flat
         # auxiliary global model: unweighted average of group models
-        self.params = server_lib.tree_mean(self.group_params)
+        self.params = out.global_params
 
         acc = self.evaluate_groups()
-        m = RoundMetrics(t, acc, 0.0, disc_sum / max(disc_n, 1))
+        m = RoundMetrics(t, acc, 0.0, float(out.discrepancy))
         self.history.add(m)
         return m
 
@@ -165,7 +175,7 @@ class FedGroupTrainer(FedAvgTrainer):
             members = np.where(self.membership == j)[0]
             if len(members) == 0:
                 continue
-            correct = self.eval_fn(self.group_params[j],
+            correct = self.eval_fn(self.group_param(j),
                                    jnp.asarray(d.x_test[members]),
                                    jnp.asarray(d.y_test[members]),
                                    jnp.asarray(d.n_test[members]))
@@ -180,5 +190,5 @@ class FedGrouProxTrainer(FedGroupTrainer):
 
     def __init__(self, model, data, cfg: FedConfig):
         if cfg.mu <= 0:
-            cfg = FedConfig(**{**cfg.__dict__, "mu": 0.01})
+            cfg = dataclasses.replace(cfg, mu=0.01)
         super().__init__(model, data, cfg)

@@ -60,13 +60,16 @@ def evaluate_gated(trainer, temperature: float = 0.1,
     trainer.key, sk = jax.random.split(trainer.key)
     keys = jax.random.split(sk, len(client_idx))
     deltas, _ = trainer.pretrain_solver(trainer.params, x, y, n, keys)
+    from repro.fed import server as server_lib
     from repro.models.modules import flatten_updates
     dpre = jax.vmap(flatten_updates)(deltas)
-    G = jnp.stack(trainer.group_delta)
+    G = jnp.asarray(trainer.group_delta)        # (m, d_w) update directions
     w = gate_weights(dpre, G, temperature)
 
+    group_list = [server_lib.tree_index(trainer.group_params, j)
+                  for j in range(G.shape[0])]
     correct = mixture_correct_counts(
-        trainer.model, trainer.group_params, w,
+        trainer.model, group_list, w,
         jnp.asarray(d.x_test[client_idx]), jnp.asarray(d.y_test[client_idx]),
         jnp.asarray(d.n_test[client_idx]))
     total = d.n_test[client_idx].sum()

@@ -36,12 +36,19 @@ def cosine_similarity_matrix(dw_a, dw_b=None):
     return jnp.clip(a @ b.T, -1.0, 1.0)
 
 
-def madc(M):
+def madc(M, use_kernel: bool = False):
     """Mean-of-Absolute-Differences of pairwise Cosines (eq. 7).
 
     M: (n, n) cosine similarity matrix -> (n, n) dissimilarity matrix.
     The z != i, j exclusion removes the self-similarity observation bias.
+
+    ``use_kernel=True`` delegates to the blocked Pallas kernel
+    (``kernels.ops.madc_block``), which streams M in (bn, bz) tiles instead
+    of materializing this reference's O(n³) broadcast.
     """
+    if use_kernel:
+        from repro.kernels.ops import madc_block
+        return madc_block(M)
     n = M.shape[0]
     diff = jnp.abs(M[:, None, :] - M[None, :, :])        # (n, n, n) over z
     eye = jnp.eye(n, dtype=bool)

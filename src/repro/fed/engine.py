@@ -6,6 +6,7 @@ frameworks build on.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
 import jax
@@ -14,7 +15,7 @@ import numpy as np
 
 from repro.data.federated import FederatedData
 from repro.fed import client as client_lib
-from repro.fed import server as server_lib
+from repro.fed import rounds as rounds_lib
 from repro.models.paper_models import ModelSpec
 
 
@@ -83,6 +84,22 @@ class FedAvgTrainer:
         from repro.models.modules import param_count
         self.model_size = param_count(self.params)
         self.comm_params = 0        # cumulative parameters transferred
+        self._round_exec = None     # lazily-built single-dispatch round
+
+    # -- single-dispatch round executor ------------------------------------
+    def _exec_spec(self) -> dict:
+        """Executor grouping: the consensus trainers run the shared group
+        round with a single group; FedGroup overrides with m + η_G."""
+        return {"n_groups": 1, "eta_g": 0.0}
+
+    def _round_executor(self):
+        if self._round_exec is None:
+            cfg = self.cfg
+            self._round_exec = jax.jit(rounds_lib.make_round_executor(
+                self.model, epochs=cfg.local_epochs,
+                batch_size=cfg.batch_size, lr=cfg.lr, mu=cfg.mu,
+                max_samples=self.data.x_train.shape[1], **self._exec_spec()))
+        return self._round_exec
 
     # -- helpers -----------------------------------------------------------
     def _select(self):
@@ -110,12 +127,6 @@ class FedAvgTrainer:
         deltas, finals = self.solver(params, x, y, n, keys)
         return deltas, finals, n
 
-    def _discrepancy(self, finals, ref_params):
-        """Eq. 4: mean ||w_i - w_ref|| over the round's participants."""
-        diffs = jax.vmap(lambda f: server_lib.tree_norm(
-            server_lib.tree_sub(f, ref_params)))(finals)
-        return float(jnp.mean(diffs))
-
     def evaluate(self, params=None, client_idx=None) -> float:
         params = self.params if params is None else params
         d = self.data
@@ -131,14 +142,17 @@ class FedAvgTrainer:
     # -- main loop ---------------------------------------------------------
     def round(self, t: int) -> RoundMetrics:
         idx = self._select()
-        deltas, finals, n = self._solve(self.params, idx)
+        x, y, n = self._client_batch(idx)
+        self.key, sk = jax.random.split(self.key)
+        keys = jax.random.split(sk, len(idx))
         # downlink: 1 model per client; uplink: 1 update per client
         self.comm_params += 2 * len(idx) * self.model_size
-        agg = server_lib.weighted_delta(deltas, n)
-        self.params = server_lib.apply_delta(self.params, agg)
-        disc = self._discrepancy(finals, self.params)
+        out = self._round_executor()(
+            jax.tree_util.tree_map(lambda p: p[None], self.params),
+            jnp.zeros(len(idx), jnp.int32), x, y, n, keys)
+        self.params = out.global_params
         acc = self.evaluate()
-        m = RoundMetrics(t, acc, 0.0, disc)
+        m = RoundMetrics(t, acc, 0.0, float(out.discrepancy))
         self.history.add(m)
         return m
 
@@ -153,5 +167,5 @@ class FedProxTrainer(FedAvgTrainer):
 
     def __init__(self, model, data, cfg: FedConfig):
         if cfg.mu <= 0:
-            cfg = FedConfig(**{**cfg.__dict__, "mu": 0.01})
+            cfg = dataclasses.replace(cfg, mu=0.01)
         super().__init__(model, data, cfg)

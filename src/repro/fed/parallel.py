@@ -42,61 +42,21 @@ def make_parallel_round(model, *, epochs: int, batch_size: int, lr: float,
     group_params_stacked: pytree with leading axis m.
     membership: (K,) int group id per selected client.
     X: (K, max_n, ...), Y: (K, max_n), n: (K,), keys: (K, 2) uint32.
+
+    Thin adapter over ``fed.rounds.make_round_executor`` — the same fused
+    round the serial trainers dispatch; only the mesh shardings differ
+    (chosen in launch/fed_dryrun.py). The executor's extra outputs
+    (discrepancy, flattened group deltas) are dead code here and XLA
+    eliminates them when this round_fn is jitted.
     """
-    max_steps = epochs * ((max_samples + batch_size - 1) // batch_size)
-
-    def local_solve(params0, x, y, n_valid, key):
-        n_valid = jnp.maximum(n_valid, 1)
-        steps = epochs * ((n_valid + batch_size - 1) // batch_size)
-
-        def loss(params, xb, yb):
-            l = model.loss(params, {"x": xb, "y": yb})
-            if mu > 0:
-                l = l + 0.5 * mu * sum(
-                    jnp.sum(jnp.square(p - p0)) for p, p0 in zip(
-                        jax.tree_util.tree_leaves(params),
-                        jax.tree_util.tree_leaves(params0)))
-            return l
-
-        def body(i, carry):
-            params, key = carry
-            key, sk = jax.random.split(key)
-            idx = jax.random.randint(sk, (batch_size,), 0, n_valid)
-            g = jax.grad(loss)(params, x[idx], y[idx])
-            live = (i < steps).astype(jnp.float32)
-            return (jax.tree_util.tree_map(
-                lambda p, gg: p - lr * live * gg, params, g), key)
-
-        params, _ = jax.lax.fori_loop(0, max_steps, body, (params0, key))
-        return jax.tree_util.tree_map(lambda a, b: a - b, params, params0)
+    from repro.fed.rounds import make_round_executor
+    core = make_round_executor(model, epochs=epochs, batch_size=batch_size,
+                               lr=lr, mu=mu, n_groups=n_groups,
+                               max_samples=max_samples, eta_g=0.0)
 
     def round_fn(group_params, membership, X, Y, n, keys):
-        # each client trains from ITS group's parameters
-        my_params = jax.tree_util.tree_map(
-            lambda g: g[membership], group_params)
-        deltas = jax.vmap(local_solve)(my_params, X, Y, n, keys)
-
-        # per-group weighted aggregation (Alg. 2 intra-group FedAvg):
-        # weights n_i normalized within each group
-        onehot = jax.nn.one_hot(membership, n_groups, dtype=jnp.float32)
-        w = n.astype(jnp.float32)
-        group_tot = onehot.T @ w                         # (m,)
-        norm_w = w[:, None] * onehot / jnp.maximum(group_tot[None], 1e-9)
-
-        def agg(d):
-            flat = d.reshape(d.shape[0], -1)             # (K, p)
-            g = norm_w.T @ flat                          # (m, p)
-            return g.reshape((n_groups,) + d.shape[1:])
-
-        agg_delta = jax.tree_util.tree_map(agg, deltas)
-        occupied = (group_tot > 0).astype(jnp.float32)
-        new_groups = jax.tree_util.tree_map(
-            lambda gp, gd: gp + occupied.reshape(
-                (-1,) + (1,) * (gp.ndim - 1)) * gd,
-            group_params, agg_delta)
-        global_params = jax.tree_util.tree_map(
-            lambda g: jnp.mean(g, axis=0), new_groups)
-        return new_groups, global_params, agg_delta
+        out = core(group_params, membership, X, Y, n, keys)
+        return out.group_params, out.global_params, out.agg_delta
 
     return round_fn
 

@@ -1,0 +1,159 @@
+"""Shared single-dispatch round executor (Algorithm 2 hot path).
+
+Every framework round is one device dispatch: group parameters live as a
+pytree stacked with leading axis ``m``; each selected client gathers its
+group's parameters, the local solver runs vmapped over the client axis, and
+per-group aggregation is a segment-sum (one-hot matmul). Inter-group
+aggregation (η_G, Alg. 2 lines 17-19), the auxiliary global model, the
+flattened per-group update directions, and the discrepancy metric (eq. 4)
+are all fused into the same program, so
+
+  * ``FedAvgTrainer`` / ``FedProxTrainer`` run it with m=1,
+  * ``FedGroupTrainer`` / ``FedGrouProxTrainer`` with m=n_groups, and
+  * ``fed.parallel.make_parallel_round`` re-exports it for the mesh path
+
+— one compiled round instead of the seed's ``m`` solver launches plus a
+dozen host-synchronizing aggregation dispatches per round.
+
+``serial_reference_round`` keeps the seed per-group loop alive as the
+equivalence oracle for tests and the BENCH_round_exec baseline.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed import client as client_lib
+from repro.fed import server as server_lib
+from repro.models.modules import flatten_updates
+
+
+class RoundOutput(NamedTuple):
+    group_params: object      # pytree stacked over m: post-η_G group models
+    global_params: object     # auxiliary global model (mean of groups)
+    agg_delta: object         # pytree stacked over m: intra-group FedAvg Δ
+    group_delta_flat: object  # (m, d_w) flattened w_g^{t+1} − w_g^t
+    discrepancy: object       # scalar: mean_i ||w_i^final − w̃_{g(i)}||
+
+
+def stack_trees(trees):
+    """List of pytrees -> one pytree with a new leading axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _group_norms(stacked, m):
+    """Per-group global parameter norm of an m-stacked pytree -> (m,)."""
+    sq = sum(jnp.sum(jnp.square(l.reshape(m, -1)), axis=1)
+             for l in jax.tree_util.tree_leaves(stacked))
+    return jnp.sqrt(sq)
+
+
+def make_round_executor(model, *, epochs: int, batch_size: int, lr: float,
+                        mu: float, n_groups: int, max_samples: int,
+                        eta_g: float = 0.0):
+    """Returns round_fn(group_params, membership, X, Y, n, keys) -> RoundOutput.
+
+    group_params: pytree with leading axis m; membership: (K,) int group id
+    per selected client; X: (K, max_n, ...); Y: (K, max_n); n: (K,);
+    keys: (K, 2) uint32. Pure function of arrays — jit/pjit it at the call
+    site (the trainers jit it; the mesh dry-run lowers it under pjit).
+    """
+    m = n_groups
+    solve = client_lib.make_local_solver(
+        model, epochs=epochs, batch_size=batch_size, lr=lr, mu=mu,
+        max_samples=max_samples)
+
+    def round_fn(group_params, membership, X, Y, n, keys) -> RoundOutput:
+        membership = membership.astype(jnp.int32)
+        # each client trains from ITS group's parameters (one gather, no loop)
+        my_params = jax.tree_util.tree_map(
+            lambda g: g[membership], group_params)
+        deltas, finals = jax.vmap(solve)(my_params, X, Y, n, keys)
+
+        # intra-group FedAvg (Alg. 2): segment-sum with n_i weights
+        # normalized within each group
+        onehot = jax.nn.one_hot(membership, m, dtype=jnp.float32)  # (K, m)
+        w = n.astype(jnp.float32)
+        group_tot = onehot.T @ w                                   # (m,)
+        norm_w = w[:, None] * onehot / jnp.maximum(group_tot[None], 1e-9)
+
+        def agg(d):
+            flat = d.reshape(d.shape[0], -1)                       # (K, p)
+            return (norm_w.T @ flat).reshape((m,) + d.shape[1:])
+
+        agg_delta = jax.tree_util.tree_map(agg, deltas)
+        occupied = (group_tot > 0).astype(jnp.float32)
+        tilde = jax.tree_util.tree_map(
+            lambda gp, gd: gp + occupied.reshape(
+                (-1,) + (1,) * (gp.ndim - 1)) * gd,
+            group_params, agg_delta)
+
+        # eq. 4 discrepancy: each client vs its group's intra-aggregated model
+        tilde_mine = jax.tree_util.tree_map(lambda t: t[membership], tilde)
+        K = membership.shape[0]
+        disc_sq = sum(jnp.sum(jnp.square((f - t).reshape(K, -1)), axis=1)
+                      for f, t in zip(jax.tree_util.tree_leaves(finals),
+                                      jax.tree_util.tree_leaves(tilde_mine)))
+        discrepancy = jnp.mean(jnp.sqrt(disc_sq))
+
+        # inter-group aggregation (Alg. 2 lines 17-19), stacked form
+        if eta_g > 0.0 and m > 1:
+            norms = jnp.maximum(_group_norms(tilde, m), 1e-12)
+
+            def inter(t):
+                nm = t / norms.reshape((-1,) + (1,) * (t.ndim - 1))
+                return t + eta_g * (jnp.sum(nm, 0, keepdims=True) - nm)
+
+            new_groups = jax.tree_util.tree_map(inter, tilde)
+        else:
+            new_groups = tilde
+
+        global_params = jax.tree_util.tree_map(
+            lambda g: jnp.mean(g, axis=0), new_groups)
+        group_delta_flat = jax.vmap(flatten_updates)(
+            jax.tree_util.tree_map(lambda a, b: a - b,
+                                   new_groups, group_params))
+        return RoundOutput(new_groups, global_params, agg_delta,
+                           group_delta_flat, discrepancy)
+
+    return round_fn
+
+
+def serial_reference_round(batch_solver, group_params_list, membership,
+                           X, Y, n, keys, *, eta_g: float = 0.0):
+    """The seed per-group round loop — m solver dispatches plus host-side
+    aggregation. Kept as the numerical oracle for the single-dispatch
+    executor (tests) and as the baseline side of BENCH_round_exec.json.
+
+    batch_solver: ``client.make_batch_solver`` product; group_params_list:
+    list of m pytrees; membership: (K,) numpy int array; the rest as in
+    ``make_round_executor`` (keys are per-client, shared with the fused path
+    so both draw identical mini-batches).
+    """
+    m = len(group_params_list)
+    tilde = list(group_params_list)
+    disc_sum, disc_n = 0.0, 0
+    for j in range(m):
+        members = np.where(np.asarray(membership) == j)[0]
+        if len(members) == 0:
+            continue
+        sel = jnp.asarray(members)
+        deltas, finals = batch_solver(group_params_list[j], X[sel], Y[sel],
+                                      n[sel], keys[sel])
+        agg = server_lib.weighted_delta(deltas, n[sel])
+        tilde[j] = server_lib.apply_delta(group_params_list[j], agg)
+        diffs = jax.vmap(lambda f: server_lib.tree_norm(
+            server_lib.tree_sub(f, tilde[j])))(finals)
+        disc_sum += float(jnp.sum(diffs))
+        disc_n += len(members)
+
+    new_list = server_lib.inter_group_aggregate(tilde, eta_g)
+    group_delta = jnp.stack([
+        flatten_updates(server_lib.tree_sub(new_list[j], group_params_list[j]))
+        for j in range(m)])
+    global_params = server_lib.tree_mean(new_list)
+    return (new_list, global_params, group_delta,
+            disc_sum / max(disc_n, 1))

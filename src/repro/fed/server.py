@@ -31,6 +31,14 @@ def tree_mean(trees):
     return jax.tree_util.tree_map(lambda *xs: sum(xs) / n, *trees)
 
 
+def tree_index(group_params, j: int):
+    """j-th group's parameters from either a list of pytrees (IFCA/FeSEM)
+    or an m-stacked pytree (FedGroup / the shared round executor)."""
+    if isinstance(group_params, (list, tuple)):
+        return group_params[j]
+    return jax.tree_util.tree_map(lambda g: g[j], group_params)
+
+
 def tree_norm(tree) -> jnp.ndarray:
     return jnp.sqrt(sum(jnp.sum(jnp.square(l))
                         for l in jax.tree_util.tree_leaves(tree)))

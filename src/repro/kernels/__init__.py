@@ -1,3 +1,6 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernels for the repo's measured hot spots. Inventory (all wrapped
+# with interpret/compile selection in ops.py, jnp oracles in ref.py):
+#   edc_cosine  fused cosine block E = K(dW, V^T)      (paper eq. 8)
+#   madc        blocked MADC proximity, O(bn^2) memory (paper eq. 7)
+#   swa         sliding-window flash attention forward
+#   ssd         Mamba2 SSD intra-chunk block

@@ -1,8 +1,9 @@
 """Pallas TPU kernel: fused cosine-similarity block for the EDC measure.
 
 E = K(ΔW, Vᵀ): the paper's eq. 8 inner loop — the perf-critical stage of the
-group cold start when d_w is large (ΔW is HDLSS: n ~ α·m clients, d_w up to
-hundreds of millions).
+EDC group cold start when d_w is large (ΔW is HDLSS: n ~ α·m clients, d_w up
+to hundreds of millions). The MADC branch has its own fused measure kernel
+(``kernels.madc.madc_block``, eq. 7); both are exposed via ``kernels.ops``.
 
 Fusion: one HBM pass over ΔW per row-block computes BOTH the dot products
 ΔW·V and the row norms ‖ΔW_i‖ (the reference implementation reads ΔW twice).

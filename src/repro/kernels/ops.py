@@ -12,6 +12,7 @@ import os
 import jax
 
 from repro.kernels.edc_cosine import edc_cosine
+from repro.kernels.madc import madc_block as _madc_block
 from repro.kernels.ssd_chunk import ssd_intra_chunk
 from repro.kernels.swa_attention import swa_attention
 
@@ -22,6 +23,12 @@ def cosine_block(dW, V, **kw):
     """Fused cosine-similarity block E = K(ΔW, Vᵀ) (paper eq. 8)."""
     kw.setdefault("interpret", _INTERPRET)
     return edc_cosine(dW, V, **kw)
+
+
+def madc_block(M, **kw):
+    """Blocked MADC proximity matrix (paper eq. 7), O(bn²) memory."""
+    kw.setdefault("interpret", _INTERPRET)
+    return _madc_block(M, **kw)
 
 
 def sliding_window_attention(q, k, v, *, window=None, causal=True, **kw):

@@ -79,8 +79,9 @@ def run_fed(args) -> int:
     print(f"max_acc={tr.history.max_acc:.4f}")
     if args.out:
         os.makedirs(args.out, exist_ok=True)
-        params = (tr.group_params[0] if hasattr(tr, "group_params")
-                  else tr.params)
+        from repro.fed.server import tree_index
+        params = (tree_index(tr.group_params, 0)
+                  if hasattr(tr, "group_params") else tr.params)
         save_pytree(os.path.join(args.out, "model.npz"), params,
                     {"framework": args.framework, "dataset": args.dataset,
                      "max_acc": tr.history.max_acc})

@@ -22,7 +22,8 @@ class TestGroupColdStart:
         tr = FedGroupTrainer(tiny_model, tiny_fed_data, fast_cfg)
         tr.group_cold_start()
         flats = [np.asarray(jnp.concatenate([jnp.ravel(l) for l in
-                 jax.tree_util.tree_leaves(p)])) for p in tr.group_params]
+                 jax.tree_util.tree_leaves(tr.group_param(j))]))
+                 for j in range(tr.m)]
         occupied = [j for j in range(tr.m)
                     if (tr.membership == j).sum() > 0]
         assert len(occupied) >= 2

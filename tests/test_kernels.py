@@ -4,8 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import measures
 from repro.kernels import ops, ref
 from repro.kernels.edc_cosine import edc_cosine
+from repro.kernels.madc import madc_block
 from repro.kernels.swa_attention import swa_attention
 
 
@@ -53,6 +55,44 @@ class TestEDCCosineKernel:
         got = np.asarray(ops.cosine_block(jax.random.normal(k1, (16, 500)),
                                           jax.random.normal(k2, (500, 3))))
         assert np.all(got <= 1 + 1e-5) and np.all(got >= -1 - 1e-5)
+
+
+class TestMADCBlockKernel:
+    @staticmethod
+    def _cosine(n, seed=0, d=64):
+        dW = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+        return measures.cosine_similarity_matrix(dW)
+
+    @pytest.mark.parametrize("n", [
+        5,          # smaller than any block
+        7,          # odd, degenerate n-2
+        60,         # paper pre-training scale (alpha*m)
+        100,        # not a multiple of 128
+        130,        # crosses a block boundary -> 2x2x2 grid
+    ])
+    def test_shapes_vs_reference(self, n):
+        M = self._cosine(n, seed=n)
+        got = ops.madc_block(M)
+        want = measures.madc(M)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+    def test_block_shape_invariance(self):
+        M = self._cosine(100, seed=1)
+        a = madc_block(M, block_n=128, block_z=128, interpret=True)
+        b = madc_block(M, block_n=64, block_z=128, interpret=True)
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+    def test_measures_delegation(self):
+        """measures.madc(use_kernel=True) routes through the Pallas path."""
+        M = self._cosine(33, seed=2)
+        np.testing.assert_allclose(measures.madc(M, use_kernel=True),
+                                   measures.madc(M), atol=2e-5, rtol=2e-5)
+
+    def test_symmetric_zero_diag(self):
+        D = np.asarray(ops.madc_block(self._cosine(40, seed=3)))
+        np.testing.assert_allclose(D, D.T, atol=1e-5)
+        np.testing.assert_allclose(np.diag(D), 0.0, atol=1e-5)
+        assert np.all(D >= -1e-5)
 
 
 class TestSSDChunkKernel:
