@@ -32,6 +32,27 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _KEEP_RUNS = 20
 
 
+def interleaved_best(thunks, reps: int = 15):
+    """Per-call minima with the candidates interleaved, in µs per thunk.
+
+    Sub-ms wall times on a contended host swing >2x call to call; the
+    minimum estimates the uncontended time, and interleaving keeps ratios
+    of the thunks from inheriting load drift between back-to-back timing
+    loops. Every watched (gated) timing ratio should come through here.
+    Thunks must synchronize internally (block_until_ready); the first call
+    of each doubles as compile warm-up and is not timed.
+    """
+    for t in thunks:
+        t()
+    times = [[] for _ in thunks]
+    for _ in range(reps):
+        for i, t in enumerate(thunks):
+            t0 = time.perf_counter()
+            t()
+            times[i].append(time.perf_counter() - t0)
+    return [min(ts) * 1e6 for ts in times]
+
+
 def _load(path):
     try:
         with open(path) as f:

@@ -1,10 +1,12 @@
 """Benchmark harness — one entry per paper table/figure + the roofline.
 
-  table1   FedAvg vs heterogeneity           (paper Table 1)
-  table3   framework comparison + ablations  (paper Table 3)
-  fig5     EDC vs MADC linearity             (paper Fig. 5)
-  cost     clustering-measure cost           (paper §3.3 complexity claim)
-  roofline per-(arch×shape) roofline terms   (deliverable g)
+  table1     FedAvg vs heterogeneity           (paper Table 1)
+  table3     framework comparison + ablations  (paper Table 3)
+  round_exec fused round executor vs the retired per-group loops
+             (static + IFCA/FeSEM dynamic assignment, m=5/K=50)
+  fig5       EDC vs MADC linearity             (paper Fig. 5)
+  cost       clustering-measure cost           (paper §3.3 complexity claim)
+  roofline   per-(arch×shape) roofline terms   (deliverable g)
 
 ``python -m benchmarks.run``          — full run
 ``python -m benchmarks.run --quick``  — reduced scales (CI-sized)
@@ -12,10 +14,15 @@
 ``python -m benchmarks.run --json out.json``  — machine-readable results
 
 Exit status is nonzero when a bench fails OR when a bench reports a perf
-regression >2x against its committed BENCH_*.json baseline (cost and table3
-watch the MADC-kernel relative speed and the round-executor speedup):
+regression >2x against its committed BENCH_*.json baseline (cost watches
+the MADC dispatch's relative speed; round_exec the static/IFCA/FeSEM
+executor speedups). Gate failures print a per-entry diff — which bench,
+crash vs watched-metric regression, best recorded -> measured — before the
+nonzero exit. ``--quick`` always includes the round_exec suite, even under
+``--only``:
 
 ``python -m benchmarks.run --quick --only cost,table3``  — the CI perf gate
+(effectively cost,table3,round_exec)
 """
 from __future__ import annotations
 
@@ -33,6 +40,7 @@ from benchmarks import (clustering_cost, eta_g_sweep, fig5_edc_madc,
 BENCHES = {
     "table1": table1_heterogeneity.main,
     "table3": table3_frameworks.main,
+    "round_exec": table3_frameworks.round_executor_bench,
     "fig5": fig5_edc_madc.main,
     "cost": clustering_cost.main,
     "eta_g": eta_g_sweep.main,
@@ -50,9 +58,13 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     names = list(BENCHES) if not args.only else args.only.split(",")
+    if args.quick and "round_exec" not in names:
+        # the CI gate must always exercise the round-executor suite
+        names.append("round_exec")
     print("name,us_per_call,derived")
     rc = 0
     report = {}
+    failures = []
     for name in names:
         t0 = time.perf_counter()
         try:
@@ -60,6 +72,7 @@ def main(argv=None) -> int:
         except Exception as e:  # noqa: BLE001
             print(f"{name},FAILED,{type(e).__name__}: {e}")
             report[name] = {"error": f"{type(e).__name__}: {e}"}
+            failures.append((name, "crash", [f"{type(e).__name__}: {e}"]))
             rc = 1
             continue
         us = (time.perf_counter() - t0) * 1e6
@@ -68,11 +81,21 @@ def main(argv=None) -> int:
             short = ";".join(f"{k}={v}" for k, v in list(derived.items())[:3])
             if derived.get("regression"):
                 short = "REGRESSION;" + short
+                failures.append((name, "perf regression",
+                                 derived.get("regression_details")
+                                 or ["regression (no details recorded)"]))
                 rc = 1
         elif isinstance(derived, list):
             short = f"rows={len(derived)}"
         report[name] = {"us_per_call": us, "derived": derived}
         print(f"{name},{us:.0f},{short}")
+    if failures:
+        # per-entry diff instead of a bare nonzero exit: which bench, crash
+        # vs watched-metric regression, best recorded value -> measured
+        print("\n# GATE FAILURES")
+        for name, kind, details in failures:
+            for d in details:
+                print(f"  {name} [{kind}]: {d}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(report, f, indent=1, default=str)

@@ -4,10 +4,13 @@ FedAvg / FedProx / IFCA / FeSEM / FedGroup(EDC|MADC) / FedGrouProx /
 ablations (RCC, RAC) on the synthetic stand-ins for the paper's datasets.
 Reports max ("early-stopping") weighted accuracy, as in §5.1.
 
-Also times the single-dispatch round executor against the seed per-group
-loop (m=5 groups, K=50 clients — the framework-comparison scale) and
-persists the trajectory to BENCH_round_exec.json; a >2x speedup loss vs the
-committed baseline flags a regression (exit gate in benchmarks/run.py).
+``round_executor_bench`` (its own "round_exec" entry in benchmarks/run.py,
+always included under --quick) times the single-dispatch round executor
+against the retired per-group loops at the framework-comparison scale
+(m=5 groups, K=50 clients) — static membership plus the fused IFCA/FeSEM
+assignment stages vs their serial oracles — and persists the trajectory to
+BENCH_round_exec.json; a >2x speedup loss vs the committed baseline flags
+a regression (exit gate in benchmarks/run.py).
 """
 from __future__ import annotations
 
@@ -17,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.bench_io import record_run
+from benchmarks.bench_io import interleaved_best, record_run
 from repro.core.fedgroup import FedGrouProxTrainer, FedGroupTrainer
 from repro.data import generators as gen
 from repro.fed import client as client_lib
@@ -63,62 +66,113 @@ def _frameworks(m: int):
     }
 
 
+def _time_pair(run_fused, run_serial, reps: int):
+    """Interleaved per-call minima (bench_io) — the fused/serial ratio is a
+    gated metric and must not inherit host-load drift between two
+    back-to-back timing loops."""
+    fused_us, serial_us = interleaved_best([run_fused, run_serial],
+                                           reps=reps)
+    return fused_us, serial_us
+
+
 def round_executor_bench(quick: bool = False, *, m: int = 5, K: int = 50):
-    """Single fused dispatch vs the seed per-group loop, same keys/data."""
+    """Single fused dispatch vs the retired per-group loops, same keys/data:
+    static membership (FedGroup-style), IFCA's argmin-loss estimation, and
+    FeSEM's ℓ2 E-step — the latter two with the assignment stage fused into
+    the same compiled round."""
+    from repro.fed.fesem import fesem_state_update, make_fesem_assign
+    from repro.fed.ifca import make_ifca_assign
+    from repro.models.modules import flatten_updates
+
     dim, max_n, epochs, batch = 32, 20, 2, 10
     model = mclr(dim, 10)
     key = jax.random.PRNGKey(0)
     params = model.init(key)
-    gp_list = [jax.tree_util.tree_map(lambda l, j=j: l + 0.01 * j, params)
-               for j in range(m)]
-    ks = jax.random.split(key, 3)
-    X = jax.random.normal(ks[0], (K, max_n, dim))
-    Y = jax.random.randint(ks[1], (K, max_n), 0, 10)
+    ks = jax.random.split(key, m + 3)
+    # well-separated group models + labels drawn from group (i % m)'s model,
+    # so IFCA's argmin-loss spreads clients over all m clusters and the
+    # serial baseline really pays m solver launches (the honest comparison)
+    gp_list = [jax.tree_util.tree_map(
+        lambda l, k=ks[j]: l + 0.3 * jax.random.normal(k, l.shape), params)
+        for j in range(m)]
+    X = jax.random.normal(ks[m], (K, max_n, dim))
+    Y = jnp.stack([jnp.argmax(model.apply(gp_list[i % m], X[i]), -1)
+                   for i in range(K)])
     n = jnp.full((K,), max_n, jnp.int32)
     membership = np.arange(K) % m
-    keys = jax.random.split(ks[2], K)
+    keys = jax.random.split(ks[m + 1], K)
 
-    fused = jax.jit(rounds.make_round_executor(
-        model, epochs=epochs, batch_size=batch, lr=0.05, mu=0.0, n_groups=m,
-        max_samples=max_n, eta_g=0.0))
+    exec_kw = dict(epochs=epochs, batch_size=batch, lr=0.05, mu=0.0,
+                   n_groups=m, max_samples=max_n)
     solver = client_lib.make_batch_solver(
         model, epochs=epochs, batch_size=batch, lr=0.05, mu=0.0,
         max_samples=max_n)
     gp = rounds.stack_trees(gp_list)
+    reps = 5 if quick else 10
+    metrics = {"quick": quick, "m": m, "K": K, "epochs": epochs}
+
+    # -- static membership (FedGroup/FedAvg executor) ----------------------
+    fused = jax.jit(rounds.make_round_executor(model, **exec_kw))
     mem_j = jnp.asarray(membership, jnp.int32)
+    f_us, s_us = _time_pair(
+        lambda: jax.block_until_ready(
+            fused(gp, mem_j, X, Y, n, keys).group_params),
+        lambda: jax.block_until_ready(rounds.serial_reference_round(
+            solver, gp_list, membership, X, Y, n, keys)[2]),
+        reps)
+    metrics.update(fused_us=f_us, serial_us=s_us,
+                   speedup=s_us / max(f_us, 1e-9))
 
-    def run_fused():
-        jax.block_until_ready(
-            fused(gp, mem_j, X, Y, n, keys).group_params)
+    # -- IFCA: in-program argmin-loss vs estimate-then-loop ----------------
+    loss_fn = client_lib.make_loss_eval_fn(model)
+    fused_ifca = jax.jit(rounds.make_round_executor(
+        model, assign_fn=make_ifca_assign(model), **exec_kw))
+    f_us, s_us = _time_pair(
+        lambda: jax.block_until_ready(
+            fused_ifca(gp, None, X, Y, n, keys).group_params),
+        lambda: jax.block_until_ready(jax.tree_util.tree_leaves(
+            rounds.serial_ifca_round(
+                solver, loss_fn, gp_list, X, Y, n, keys)[0])[0]),
+        reps)
+    metrics.update(ifca_fused_us=f_us, ifca_serial_us=s_us,
+                   ifca_speedup=s_us / max(f_us, 1e-9))
 
-    def run_serial():
-        out = rounds.serial_reference_round(
-            solver, gp_list, membership, X, Y, n, keys)
-        jax.block_until_ready(out[2])
+    # -- FeSEM: in-program ℓ2 E-step + scatter vs host numpy rebuild -------
+    centers = np.stack([np.asarray(flatten_updates(p)) for p in gp_list])
+    local_flat = np.stack([centers[i % m] for i in range(K)])
+    fused_fesem = jax.jit(rounds.make_round_executor(
+        model, assign_fn=make_fesem_assign(),
+        state_update_fn=fesem_state_update, **exec_kw))
+    state = {"local_flat": jnp.asarray(local_flat),
+             "idx": jnp.arange(K, dtype=jnp.int32)}
+    f_us, s_us = _time_pair(
+        lambda: jax.block_until_ready(
+            fused_fesem(gp, state, X, Y, n, keys)
+            .assign_state["local_flat"]),
+        lambda: rounds.serial_fesem_round(
+            solver, gp_list, local_flat, X, Y, n, keys)[2],
+        reps)
+    metrics.update(fesem_fused_us=f_us, fesem_serial_us=s_us,
+                   fesem_speedup=s_us / max(f_us, 1e-9))
 
-    run_fused(), run_serial()                           # compile both paths
-    reps = 3 if quick else 10
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        run_fused()
-    fused_us = (time.perf_counter() - t0) / reps * 1e6
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        run_serial()
-    serial_us = (time.perf_counter() - t0) / reps * 1e6
-
-    speedup = serial_us / max(fused_us, 1e-9)
     print(f"\n# Round executor (m={m}, K={K}, E={epochs}): "
-          f"single-dispatch {fused_us:.0f}us vs seed loop {serial_us:.0f}us "
-          f"-> {speedup:.1f}x")
-    metrics = {"quick": quick, "m": m, "K": K, "epochs": epochs,
-               "fused_us": fused_us, "serial_us": serial_us,
-               "speedup": speedup}
+          f"single-dispatch vs retired per-group loop")
+    for tag, label in (("", "static"), ("ifca_", "ifca"),
+                       ("fesem_", "fesem")):
+        print(f"  {label:>7}: fused {metrics[tag + 'fused_us']:.0f}us vs "
+              f"serial {metrics[tag + 'serial_us']:.0f}us -> "
+              f"{metrics[tag + 'speedup']:.1f}x")
     regression, details = record_run(
-        "BENCH_round_exec.json", metrics, watch=[("speedup", "min")])
+        "BENCH_round_exec.json", metrics,
+        watch=[("speedup", "min"), ("ifca_speedup", "min"),
+               ("fesem_speedup", "min")])
     if regression:
         print("REGRESSION:", "; ".join(details))
-    return {**metrics, "regression": regression}
+    return {"speedup": round(metrics["speedup"], 2),
+            "ifca_speedup": round(metrics["ifca_speedup"], 2),
+            "fesem_speedup": round(metrics["fesem_speedup"], 2),
+            "regression": regression, "regression_details": details,
+            **metrics}
 
 
 def main(quick: bool = False, n_rounds: int | None = None):
@@ -150,10 +204,8 @@ def main(quick: bool = False, n_rounds: int | None = None):
                        ("fedavg", "ifca", "fesem", "fg_edc"))
         print(f"  {dname}: {rel}")
 
-    exec_bench = round_executor_bench(quick)
-    return {"round_exec_speedup": round(exec_bench["speedup"], 2),
-            "regression": exec_bench["regression"],
-            "table3": results, "round_exec": exec_bench}
+    return {"datasets": len(results), "frameworks": len(_frameworks(3)),
+            "table3": results}
 
 
 if __name__ == "__main__":

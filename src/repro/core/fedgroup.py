@@ -33,18 +33,15 @@ import numpy as np
 from repro.core import cluster as cluster_lib
 from repro.core import measures
 from repro.fed import client as client_lib
-from repro.fed import server as server_lib
-from repro.fed.engine import FedAvgTrainer, FedConfig, History, RoundMetrics
+from repro.fed.engine import FedConfig, GroupedTrainer, RoundMetrics
 from repro.models.modules import flatten_updates
 
 
-class FedGroupTrainer(FedAvgTrainer):
+class FedGroupTrainer(GroupedTrainer):
     framework = "fedgroup"
 
-    def __init__(self, model, data, cfg: FedConfig):
-        super().__init__(model, data, cfg)
-        self.m = cfg.n_groups
-        self.membership = np.full(data.n_clients, -1, np.int64)
+    def __init__(self, model, data, cfg: FedConfig, mesh=None):
+        super().__init__(model, data, cfg, mesh=mesh)
         # group state: pytree stacked over the group axis + (m, d_w) latest
         # flattened update direction Δw^(g)
         self.group_params = jax.tree_util.tree_map(
@@ -59,10 +56,6 @@ class FedGroupTrainer(FedAvgTrainer):
 
     def _exec_spec(self) -> dict:
         return {"n_groups": self.m, "eta_g": self.cfg.eta_g}
-
-    def group_param(self, j: int):
-        """The j-th group's parameter pytree (view into the stacked state)."""
-        return server_lib.tree_index(self.group_params, j)
 
     # ------------------------------------------------------------------
     # Group cold start (Algorithm 3)
@@ -165,30 +158,12 @@ class FedGroupTrainer(FedAvgTrainer):
         self.history.add(m)
         return m
 
-    # ------------------------------------------------------------------
-    def evaluate_groups(self) -> float:
-        """Weighted accuracy: each group model on the test data of all
-        clients historically assigned to it (paper §5.1 metric)."""
-        total_correct, total_n = 0, 0
-        d = self.data
-        for j in range(self.m):
-            members = np.where(self.membership == j)[0]
-            if len(members) == 0:
-                continue
-            correct = self.eval_fn(self.group_param(j),
-                                   jnp.asarray(d.x_test[members]),
-                                   jnp.asarray(d.y_test[members]),
-                                   jnp.asarray(d.n_test[members]))
-            total_correct += int(np.sum(np.asarray(correct)))
-            total_n += int(d.n_test[members].sum())
-        return total_correct / max(total_n, 1)
-
 
 class FedGrouProxTrainer(FedGroupTrainer):
     """FedGroup + FedProx local solver (the paper's FedGrouProx)."""
     framework = "fedgrouprox"
 
-    def __init__(self, model, data, cfg: FedConfig):
+    def __init__(self, model, data, cfg: FedConfig, mesh=None):
         if cfg.mu <= 0:
             cfg = dataclasses.replace(cfg, mu=0.01)
-        super().__init__(model, data, cfg)
+        super().__init__(model, data, cfg, mesh=mesh)

@@ -68,9 +68,9 @@ def evaluate_gated(trainer, temperature: float = 0.1,
 
     group_list = [server_lib.tree_index(trainer.group_params, j)
                   for j in range(G.shape[0])]
+    xt, yt, nt = trainer._test_stack      # pinned on device at trainer init
+    sel = jnp.asarray(client_idx.astype(np.int32))
     correct = mixture_correct_counts(
-        trainer.model, group_list, w,
-        jnp.asarray(d.x_test[client_idx]), jnp.asarray(d.y_test[client_idx]),
-        jnp.asarray(d.n_test[client_idx]))
+        trainer.model, group_list, w, xt[sel], yt[sel], nt[sel])
     total = d.n_test[client_idx].sum()
     return float(np.sum(np.asarray(correct)) / max(total, 1))

@@ -36,7 +36,7 @@ def cosine_similarity_matrix(dw_a, dw_b=None):
     return jnp.clip(a @ b.T, -1.0, 1.0)
 
 
-def madc(M, use_kernel: bool = False):
+def madc(M, use_kernel: bool = False, min_kernel_n: int | None = None):
     """Mean-of-Absolute-Differences of pairwise Cosines (eq. 7).
 
     M: (n, n) cosine similarity matrix -> (n, n) dissimilarity matrix.
@@ -44,11 +44,17 @@ def madc(M, use_kernel: bool = False):
 
     ``use_kernel=True`` delegates to the blocked Pallas kernel
     (``kernels.ops.madc_block``), which streams M in (bn, bz) tiles instead
-    of materializing this reference's O(n³) broadcast.
+    of materializing this reference's O(n³) broadcast — but only at or
+    above the measured crossover size (``kernels.ops.madc_crossover_n``);
+    below it the reference is faster than the kernel's tiling overhead and
+    this dispatch automatically falls back to it. ``min_kernel_n``
+    overrides the crossover (0 forces the kernel path — tests/benchmarks).
     """
     if use_kernel:
-        from repro.kernels.ops import madc_block
-        return madc_block(M)
+        from repro.kernels.ops import madc_block, madc_crossover_n
+        cut = madc_crossover_n() if min_kernel_n is None else min_kernel_n
+        if M.shape[0] >= cut:
+            return madc_block(M)
     n = M.shape[0]
     diff = jnp.abs(M[:, None, :] - M[None, :, :])        # (n, n, n) over z
     eye = jnp.eye(n, dtype=bool)

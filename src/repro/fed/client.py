@@ -79,12 +79,20 @@ def make_eval_fn(model: ModelSpec):
     return jax.jit(jax.vmap(one, in_axes=(None, 0, 0, 0)))
 
 
-def make_loss_eval_fn(model: ModelSpec):
-    """mean train loss per client (used by IFCA cluster estimation)."""
+def client_mean_loss(model: ModelSpec):
+    """Unjitted per-client mean CE loss (params, x, y, n_valid) -> scalar —
+    the IFCA cluster-identity score, reused both by the standalone loss
+    evaluator below and by the in-program assignment stage of the fused
+    round (``fed.ifca.make_ifca_assign``)."""
     def one(params, x, y, n_valid):
         logits = model.apply(params, x)
         logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
         ce = -jnp.take_along_axis(logp, y.astype(jnp.int32)[:, None], -1)[:, 0]
         mask = jnp.arange(y.shape[0]) < n_valid
         return jnp.sum(ce * mask) / jnp.maximum(n_valid, 1)
-    return jax.jit(jax.vmap(one, in_axes=(None, 0, 0, 0)))
+    return one
+
+
+def make_loss_eval_fn(model: ModelSpec):
+    """mean train loss per client (used by IFCA cluster estimation)."""
+    return jax.jit(jax.vmap(client_mean_loss(model), in_axes=(None, 0, 0, 0)))

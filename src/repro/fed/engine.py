@@ -1,8 +1,11 @@
 """Round-based federated training engines: FedAvg / FedProx base trainer.
 
-The trainer keeps jnp stacks for all clients (padded) and vmaps the local
-solver over the selected-client axis — the CPU/TPU-agnostic core the other
-frameworks build on.
+The trainer pins the padded per-client train/eval stacks on device once at
+init and vmaps the local solver over the selected-client axis — the
+CPU/TPU-agnostic core the other frameworks build on. When more than one
+device is visible the round executor's client axis is sharded over a
+"data" mesh (``fed.parallel.make_sharded_executor``); a single device gets
+the plain jit path.
 """
 from __future__ import annotations
 
@@ -15,7 +18,9 @@ import numpy as np
 
 from repro.data.federated import FederatedData
 from repro.fed import client as client_lib
+from repro.fed import parallel as parallel_lib
 from repro.fed import rounds as rounds_lib
+from repro.fed import server as server_lib
 from repro.models.paper_models import ModelSpec
 
 
@@ -71,7 +76,8 @@ class FedAvgTrainer:
 
     framework = "fedavg"
 
-    def __init__(self, model: ModelSpec, data: FederatedData, cfg: FedConfig):
+    def __init__(self, model: ModelSpec, data: FederatedData, cfg: FedConfig,
+                 mesh=None):
         self.model, self.data, self.cfg = model, data, cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.key = jax.random.PRNGKey(cfg.seed)
@@ -85,20 +91,31 @@ class FedAvgTrainer:
         self.model_size = param_count(self.params)
         self.comm_params = 0        # cumulative parameters transferred
         self._round_exec = None     # lazily-built single-dispatch round
+        # client axis sharded over "data" on multi-device (None = plain jit)
+        self.mesh = parallel_lib.default_data_mesh() if mesh is None else mesh
+        # pin the padded per-client stacks on device once — selection is a
+        # device gather, not a fresh host->device upload every round
+        self._train_stack = tuple(jnp.asarray(a) for a in
+                                  (data.x_train, data.y_train, data.n_train))
+        self._test_stack = tuple(jnp.asarray(a) for a in
+                                 (data.x_test, data.y_test, data.n_test))
 
     # -- single-dispatch round executor ------------------------------------
     def _exec_spec(self) -> dict:
         """Executor grouping: the consensus trainers run the shared group
-        round with a single group; FedGroup overrides with m + η_G."""
+        round with a single group; FedGroup overrides with m + η_G,
+        IFCA/FeSEM additionally install their assignment stage."""
         return {"n_groups": 1, "eta_g": 0.0}
 
     def _round_executor(self):
         if self._round_exec is None:
             cfg = self.cfg
-            self._round_exec = jax.jit(rounds_lib.make_round_executor(
+            fn = rounds_lib.make_round_executor(
                 self.model, epochs=cfg.local_epochs,
                 batch_size=cfg.batch_size, lr=cfg.lr, mu=cfg.mu,
-                max_samples=self.data.x_train.shape[1], **self._exec_spec()))
+                max_samples=self.data.x_train.shape[1], **self._exec_spec())
+            self._round_exec = parallel_lib.make_sharded_executor(
+                fn, self.mesh)
         return self._round_exec
 
     # -- helpers -----------------------------------------------------------
@@ -116,9 +133,9 @@ class FedAvgTrainer:
         return idx
 
     def _client_batch(self, idx):
-        d = self.data
-        return (jnp.asarray(d.x_train[idx]), jnp.asarray(d.y_train[idx]),
-                jnp.asarray(d.n_train[idx]))
+        sel = jnp.asarray(np.asarray(idx, np.int32))
+        x, y, n = self._train_stack
+        return x[sel], y[sel], n[sel]
 
     def _solve(self, params, idx):
         x, y, n = self._client_batch(idx)
@@ -130,12 +147,16 @@ class FedAvgTrainer:
     def evaluate(self, params=None, client_idx=None) -> float:
         params = self.params if params is None else params
         d = self.data
-        idx = np.arange(d.n_clients) if client_idx is None else np.asarray(client_idx)
-        if len(idx) == 0:
-            return 0.0
-        correct = self.eval_fn(params, jnp.asarray(d.x_test[idx]),
-                               jnp.asarray(d.y_test[idx]),
-                               jnp.asarray(d.n_test[idx]))
+        xt, yt, nt = self._test_stack
+        if client_idx is None:
+            idx = np.arange(d.n_clients)
+        else:
+            idx = np.asarray(client_idx)
+            if len(idx) == 0:
+                return 0.0
+            sel = jnp.asarray(idx.astype(np.int32))
+            xt, yt, nt = xt[sel], yt[sel], nt[sel]
+        correct = self.eval_fn(params, xt, yt, nt)
         total = d.n_test[idx].sum()
         return float(np.sum(np.asarray(correct)) / max(total, 1))
 
@@ -165,7 +186,38 @@ class FedAvgTrainer:
 class FedProxTrainer(FedAvgTrainer):
     framework = "fedprox"
 
-    def __init__(self, model, data, cfg: FedConfig):
+    def __init__(self, model, data, cfg: FedConfig, mesh=None):
         if cfg.mu <= 0:
             cfg = dataclasses.replace(cfg, mu=0.01)
-        super().__init__(model, data, cfg)
+        super().__init__(model, data, cfg, mesh=mesh)
+
+
+class GroupedTrainer(FedAvgTrainer):
+    """Shared machinery for the clustered trainers (FedGroup, IFCA, FeSEM):
+    m group models kept as an m-stacked pytree, per-client membership
+    bookkeeping, and group-wise weighted-accuracy evaluation."""
+
+    def __init__(self, model, data, cfg: FedConfig, mesh=None):
+        super().__init__(model, data, cfg, mesh=mesh)
+        self.m = cfg.n_groups
+        self.membership = np.full(data.n_clients, -1, np.int64)
+
+    def group_param(self, j: int):
+        """The j-th group's parameter pytree (view into the stacked state)."""
+        return server_lib.tree_index(self.group_params, j)
+
+    def evaluate_groups(self) -> float:
+        """Weighted accuracy: each group model on the test data of all
+        clients historically assigned to it (paper §5.1 metric)."""
+        total_correct, total_n = 0, 0
+        xt, yt, nt = self._test_stack
+        for j in range(self.m):
+            members = np.where(self.membership == j)[0]
+            if len(members) == 0:
+                continue
+            sel = jnp.asarray(members.astype(np.int32))
+            correct = self.eval_fn(self.group_param(j), xt[sel], yt[sel],
+                                   nt[sel])
+            total_correct += int(np.sum(np.asarray(correct)))
+            total_n += int(self.data.n_test[members].sum())
+        return total_correct / max(total_n, 1)

@@ -7,6 +7,15 @@ recomputed (M-step) as weighted averages of their members' local models.
 
 The ℓ2 distance on flattened HDLSS parameters is exactly what the paper's
 EDC measure is designed to beat (distance concentration, §2.2).
+
+Both EM halves are fused into the round executor's single dispatch: the
+E-step is the in-program assignment stage (``make_fesem_assign``) over
+flattened centers, and the M-step is the executor's intra-group FedAvg
+(center + avg_w(Δ) ≡ avg_w of the members' final local models). The
+per-client flattened-model matrix ``local_flat`` is a persistent device
+array updated by an in-program scatter (``fesem_state_update``) — the seed
+implementation's host numpy matrix rebuilt through ``_flat()`` round-trips
+every round survives only as ``fed.rounds.serial_fesem_round``.
 """
 from __future__ import annotations
 
@@ -14,82 +23,64 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.fed import server as server_lib
-from repro.fed.engine import FedAvgTrainer, FedConfig, RoundMetrics
+from repro.fed import rounds as rounds_lib
+from repro.fed.engine import FedConfig, GroupedTrainer, RoundMetrics
 from repro.models.modules import flatten_updates
 
 
-class FeSEMTrainer(FedAvgTrainer):
+def make_fesem_assign():
+    """Assignment stage: argmin-ℓ2 E-step of each selected client's last
+    local model against the flattened group centers. state:
+    {"local_flat": (n_clients, d_w), "idx": (K,) selected client ids}."""
+    def assign(group_params, X, Y, n, state):
+        centers = jax.vmap(flatten_updates)(group_params)       # (m, d_w)
+        local = state["local_flat"][state["idx"]]               # (K, d_w)
+        d2 = jnp.sum(jnp.square(local[:, None, :] - centers[None]), -1)
+        return jnp.argmin(d2, axis=1)
+
+    return assign
+
+
+def fesem_state_update(state, membership, deltas, finals):
+    """Scatter the selected clients' new flattened local models back into
+    the persistent (n_clients, d_w) device matrix — no host round-trip."""
+    flat = jax.vmap(flatten_updates)(finals)                    # (K, d_w)
+    return {"idx": state["idx"],
+            "local_flat": state["local_flat"].at[state["idx"]].set(flat)}
+
+
+class FeSEMTrainer(GroupedTrainer):
     framework = "fesem"
 
-    def __init__(self, model, data, cfg: FedConfig):
-        super().__init__(model, data, cfg)
-        self.m = cfg.n_groups
+    def __init__(self, model, data, cfg: FedConfig, mesh=None):
+        super().__init__(model, data, cfg, mesh=mesh)
         keys = jax.random.split(jax.random.PRNGKey(cfg.seed + 29), self.m)
-        self.group_params = [model.init(k) for k in keys]
-        self.membership = np.full(data.n_clients, -1, np.int64)
-        # local models last seen per client (lazily initialized to center 0)
-        self.local_flat = None
+        self.group_params = rounds_lib.stack_trees(
+            [model.init(k) for k in keys])
+        # local models last seen per client, initialized to center 0 —
+        # lives on device for the in-program E-step gather / M-step scatter
+        flat0 = flatten_updates(self.group_param(0))
+        self.local_flat = jnp.tile(flat0[None], (data.n_clients, 1))
 
-    def _flat(self, params):
-        return np.asarray(flatten_updates(params))
+    def _exec_spec(self) -> dict:
+        return {"n_groups": self.m, "eta_g": 0.0,
+                "assign_fn": make_fesem_assign(),
+                "state_update_fn": fesem_state_update}
 
     def round(self, t: int) -> RoundMetrics:
         idx = self._select()
         # FeSEM: server-side E-step, then 1 center down + 1 model up
         self.comm_params += 2 * len(idx) * self.model_size
-        centers = np.stack([self._flat(p) for p in self.group_params])
-
-        if self.local_flat is None:
-            self.local_flat = np.zeros((self.data.n_clients,
-                                        centers.shape[1]), np.float32)
-            self.local_flat[:] = centers[0]
-
-        # E-step: nearest center in ℓ2 over flattened parameters
-        d2 = ((self.local_flat[idx][:, None, :] - centers[None]) ** 2).sum(-1)
-        assign = d2.argmin(1)
-        self.membership[idx] = assign
-
-        disc_sum, disc_n = 0.0, 0
-        new_flats = {}
-        for j in range(self.m):
-            members = idx[assign == j]
-            if len(members) == 0:
-                continue
-            deltas, finals, n = self._solve(self.group_params[j], members)
-            # M-step: center = weighted average of members' local models
-            w = np.asarray(n, np.float64)
-            w /= w.sum()
-            avg = jax.tree_util.tree_map(
-                lambda f: jnp.sum(f * jnp.asarray(w).reshape(
-                    (-1,) + (1,) * (f.ndim - 1)), axis=0), finals)
-            self.group_params[j] = avg
-            flats = np.asarray(jax.vmap(flatten_updates)(finals))
-            for mi, fi in zip(members, flats):
-                new_flats[int(mi)] = fi
-            diffs = jax.vmap(lambda f: server_lib.tree_norm(
-                server_lib.tree_sub(f, avg)))(finals)
-            disc_sum += float(jnp.sum(diffs))
-            disc_n += len(members)
-        for mi, fi in new_flats.items():
-            self.local_flat[mi] = fi
-
+        x, y, n = self._client_batch(idx)
+        self.key, sk = jax.random.split(self.key)
+        keys = jax.random.split(sk, len(idx))
+        state = {"local_flat": self.local_flat,
+                 "idx": jnp.asarray(np.asarray(idx, np.int32))}
+        out = self._round_executor()(self.group_params, state, x, y, n, keys)
+        self.group_params = out.group_params
+        self.local_flat = out.assign_state["local_flat"]
+        self.membership[idx] = np.asarray(out.membership)
         acc = self.evaluate_groups()
-        m = RoundMetrics(t, acc, 0.0, disc_sum / max(disc_n, 1))
+        m = RoundMetrics(t, acc, 0.0, float(out.discrepancy))
         self.history.add(m)
         return m
-
-    def evaluate_groups(self) -> float:
-        total_correct, total_n = 0, 0
-        d = self.data
-        for j in range(self.m):
-            members = np.where(self.membership == j)[0]
-            if len(members) == 0:
-                continue
-            correct = self.eval_fn(self.group_params[j],
-                                   jnp.asarray(d.x_test[members]),
-                                   jnp.asarray(d.y_test[members]),
-                                   jnp.asarray(d.n_test[members]))
-            total_correct += int(np.sum(np.asarray(correct)))
-            total_n += int(d.n_test[members].sum())
-        return total_correct / max(total_n, 1)

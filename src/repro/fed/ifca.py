@@ -5,6 +5,14 @@ each client estimates its cluster identity as the model with minimum local
 training loss, then optimizes that model. Accurate but communication-heavy
 (m× model broadcast per round — the overhead FedGroup's static grouping and
 newcomer cold start avoid; we count it in the benchmark).
+
+The argmin-loss estimation runs as the round executor's in-program
+assignment stage (``make_ifca_assign``): the per-client loss under all m
+stacked group models and the subsequent per-cluster FedAvg are fused into
+ONE device dispatch per round — the retired estimate-then-loop baseline
+survives as ``fed.rounds.serial_ifca_round``. Fusion changes only the
+dispatch count; the m× broadcast *communication accounting* is exactly the
+seed's ((m+1) model transfers per selected client per round).
 """
 from __future__ import annotations
 
@@ -13,64 +21,49 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fed import client as client_lib
-from repro.fed import server as server_lib
-from repro.fed.engine import FedAvgTrainer, FedConfig, RoundMetrics
+from repro.fed import rounds as rounds_lib
+from repro.fed.engine import FedConfig, GroupedTrainer, RoundMetrics
 
 
-class IFCATrainer(FedAvgTrainer):
+def make_ifca_assign(model):
+    """Assignment stage: per-client argmin of mean train loss over the m
+    stacked group models (IFCA §3 cluster-identity estimate)."""
+    loss_one = client_lib.client_mean_loss(model)
+
+    def assign(group_params, X, Y, n, state):
+        per_client = jax.vmap(loss_one, in_axes=(None, 0, 0, 0))
+        losses = jax.vmap(lambda gp: per_client(gp, X, Y, n))(group_params)
+        return jnp.argmin(losses, axis=0)                   # (K,) over m
+
+    return assign
+
+
+class IFCATrainer(GroupedTrainer):
     framework = "ifca"
 
-    def __init__(self, model, data, cfg: FedConfig):
-        super().__init__(model, data, cfg)
-        self.m = cfg.n_groups
+    def __init__(self, model, data, cfg: FedConfig, mesh=None):
+        super().__init__(model, data, cfg, mesh=mesh)
         keys = jax.random.split(jax.random.PRNGKey(cfg.seed + 17), self.m)
         # random initializations of cluster centers (IFCA §3)
-        self.group_params = [model.init(k) for k in keys]
-        self.loss_fn = client_lib.make_loss_eval_fn(model)
-        self.membership = np.full(data.n_clients, -1, np.int64)
+        self.group_params = rounds_lib.stack_trees(
+            [model.init(k) for k in keys])
         self.comm_models_per_round = self.m  # broadcast overhead bookkeeping
 
-    def _estimate_clusters(self, idx):
-        x, y, n = self._client_batch(idx)
-        losses = jnp.stack([self.loss_fn(p, x, y, n)
-                            for p in self.group_params])       # (m, K)
-        return np.asarray(jnp.argmin(losses, axis=0))
+    def _exec_spec(self) -> dict:
+        return {"n_groups": self.m, "eta_g": 0.0,
+                "assign_fn": make_ifca_assign(self.model)}
 
     def round(self, t: int) -> RoundMetrics:
         idx = self._select()
         # IFCA broadcasts ALL m cluster models to every selected client
         self.comm_params += (self.m + 1) * len(idx) * self.model_size
-        assign = self._estimate_clusters(idx)
-        self.membership[idx] = assign
-        disc_sum, disc_n = 0.0, 0
-        for j in range(self.m):
-            members = idx[assign == j]
-            if len(members) == 0:
-                continue
-            deltas, finals, n = self._solve(self.group_params[j], members)
-            agg = server_lib.weighted_delta(deltas, n)
-            self.group_params[j] = server_lib.apply_delta(
-                self.group_params[j], agg)
-            diffs = jax.vmap(lambda f: server_lib.tree_norm(
-                server_lib.tree_sub(f, self.group_params[j])))(finals)
-            disc_sum += float(jnp.sum(diffs))
-            disc_n += len(members)
+        x, y, n = self._client_batch(idx)
+        self.key, sk = jax.random.split(self.key)
+        keys = jax.random.split(sk, len(idx))
+        out = self._round_executor()(self.group_params, None, x, y, n, keys)
+        self.group_params = out.group_params
+        self.membership[idx] = np.asarray(out.membership)
         acc = self.evaluate_groups()
-        m = RoundMetrics(t, acc, 0.0, disc_sum / max(disc_n, 1))
+        m = RoundMetrics(t, acc, 0.0, float(out.discrepancy))
         self.history.add(m)
         return m
-
-    def evaluate_groups(self) -> float:
-        total_correct, total_n = 0, 0
-        d = self.data
-        for j in range(self.m):
-            members = np.where(self.membership == j)[0]
-            if len(members) == 0:
-                continue
-            correct = self.eval_fn(self.group_params[j],
-                                   jnp.asarray(d.x_test[members]),
-                                   jnp.asarray(d.y_test[members]),
-                                   jnp.asarray(d.n_test[members]))
-            total_correct += int(np.sum(np.asarray(correct)))
-            total_n += int(d.n_test[members].sum())
-        return total_correct / max(total_n, 1)

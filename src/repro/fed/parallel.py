@@ -1,6 +1,12 @@
 """Mesh-parallel FedGroup — the paper's technique as a first-class
 distributed workload (the TPU-native replacement for the per-client loop).
 
+The serial trainers' sharding helpers live here too: ``default_data_mesh``
+(a 1-D "data" mesh over all visible devices, None on one device) and
+``make_sharded_executor`` (jit of a round executor with the client axis of
+every K-leading input placed sharded over "data") — so the same fused
+round runs client-parallel everywhere, not just under the dry-run below.
+
 Two jittable entry points, both lowered by the FedGroup dry-run:
 
   parallel_round      one FedGroup communication round: K clients sharded
@@ -26,8 +32,73 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.modules import flatten_updates
+
+
+# ---------------------------------------------------------------------------
+# Client-axis sharding for the serial trainers
+# ---------------------------------------------------------------------------
+
+def default_data_mesh():
+    """A 1-D ("data",) mesh over all visible devices, or None on a single
+    device — the trainers' auto-detected executor sharding (the 1-device
+    None answer selects the plain-jit path)."""
+    n = jax.device_count()
+    if n <= 1:
+        return None
+    return jax.make_mesh((n,), ("data",))
+
+
+def shard_client_axis(mesh, tree):
+    """device_put every array leaf with its leading (client) axis sharded
+    over the mesh "data" axes when divisible, replicated otherwise.
+
+    Works on arbitrary pytrees, so the dynamic-assignment state (e.g.
+    FeSEM's {"local_flat", "idx"}) shards leaf-by-leaf: local_flat by rows
+    over all clients, idx over the selected-client axis.
+    """
+    total = 1
+    for a in mesh.axis_names:
+        total *= mesh.shape[a]
+
+    def put(leaf):
+        leaf = jnp.asarray(leaf)
+        if leaf.ndim >= 1 and leaf.shape[0] % total == 0 and leaf.shape[0]:
+            spec = P(mesh.axis_names, *([None] * (leaf.ndim - 1)))
+        else:
+            spec = P(*([None] * leaf.ndim))
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(put, tree)
+
+
+def make_sharded_executor(round_fn, mesh=None):
+    """jit ``round_fn`` (a ``fed.rounds.make_round_executor`` product) with
+    its client axis sharded over ``mesh``.
+
+    mesh=None (single device) is the plain-jit special case. With a mesh,
+    group parameters are replicated and the K-axis inputs (membership or
+    assignment state, X, Y, n, keys) are placed with their leading axis
+    sharded over "data" before dispatch — the compiled round then runs
+    client-parallel exactly like ``make_parallel_round`` under the dry-run
+    mesh, with XLA inserting the segment-sum all-reduces.
+    """
+    jfn = jax.jit(round_fn)
+    if mesh is None:
+        return jfn
+    replicate = lambda t: jax.tree_util.tree_map(
+        lambda l: jax.device_put(
+            l, NamedSharding(mesh, P(*([None] * jnp.ndim(l))))), t)
+
+    def call(group_params, assign, X, Y, n, keys):
+        group_params = replicate(group_params)
+        assign, X, Y, n, keys = (shard_client_axis(mesh, t)
+                                 for t in (assign, X, Y, n, keys))
+        return jfn(group_params, assign, X, Y, n, keys)
+
+    return call
 
 
 # ---------------------------------------------------------------------------

@@ -9,14 +9,28 @@ flattened per-group update directions, and the discrepancy metric (eq. 4)
 are all fused into the same program, so
 
   * ``FedAvgTrainer`` / ``FedProxTrainer`` run it with m=1,
-  * ``FedGroupTrainer`` / ``FedGrouProxTrainer`` with m=n_groups, and
-  * ``fed.parallel.make_parallel_round`` re-exports it for the mesh path
+  * ``FedGroupTrainer`` / ``FedGrouProxTrainer`` with m=n_groups,
+  * ``IFCATrainer`` / ``FeSEMTrainer`` with m=n_groups plus an in-program
+    *assignment stage* (``assign_fn``): IFCA's per-client argmin-loss over
+    all m stacked models and FeSEM's argmin-ℓ2 E-step over flattened
+    centers run inside the same compiled round, feeding the gather /
+    segment-sum directly — no host-side ``np.where`` loops or per-group
+    solver launches even for the frameworks that reschedule every round
+    (IFCA's m× model broadcast *accounting* is unchanged by the fusion:
+    the server still ships all m models per round, we just price it
+    without also paying m dispatches), and
+  * ``fed.parallel.make_parallel_round`` re-exports it for the mesh path;
+    the serial trainers shard the client axis over a "data" mesh through
+    ``fed.parallel.make_sharded_executor`` whenever more than one device
+    is visible (plain jit is the 1-device special case)
 
 — one compiled round instead of the seed's ``m`` solver launches plus a
 dozen host-synchronizing aggregation dispatches per round.
 
 ``serial_reference_round`` keeps the seed per-group loop alive as the
-equivalence oracle for tests and the BENCH_round_exec baseline.
+equivalence oracle for tests and the BENCH_round_exec baseline;
+``serial_ifca_round`` / ``serial_fesem_round`` do the same for the retired
+estimate-then-loop baselines of the dynamic-assignment frameworks.
 """
 from __future__ import annotations
 
@@ -37,6 +51,8 @@ class RoundOutput(NamedTuple):
     agg_delta: object         # pytree stacked over m: intra-group FedAvg Δ
     group_delta_flat: object  # (m, d_w) flattened w_g^{t+1} − w_g^t
     discrepancy: object       # scalar: mean_i ||w_i^final − w̃_{g(i)}||
+    membership: object        # (K,) int32 group id used this round
+    assign_state: object      # updated assignment-stage state (None if static)
 
 
 def stack_trees(trees):
@@ -53,13 +69,25 @@ def _group_norms(stacked, m):
 
 def make_round_executor(model, *, epochs: int, batch_size: int, lr: float,
                         mu: float, n_groups: int, max_samples: int,
-                        eta_g: float = 0.0):
+                        eta_g: float = 0.0, assign_fn=None,
+                        state_update_fn=None):
     """Returns round_fn(group_params, membership, X, Y, n, keys) -> RoundOutput.
 
     group_params: pytree with leading axis m; membership: (K,) int group id
     per selected client; X: (K, max_n, ...); Y: (K, max_n); n: (K,);
     keys: (K, 2) uint32. Pure function of arrays — jit/pjit it at the call
     site (the trainers jit it; the mesh dry-run lowers it under pjit).
+
+    Dynamic assignment (IFCA / FeSEM): pass
+      assign_fn(group_params, X, Y, n, state) -> (K,) int membership
+    and the second positional argument of round_fn becomes the opaque
+    assignment *state* pytree instead of a membership vector — the cluster
+    estimate is computed inside the compiled round and fed straight into the
+    gather/segment-sum. An optional
+      state_update_fn(state, membership, deltas, finals) -> new state
+    keeps per-client state (e.g. FeSEM's flattened local models) on device
+    across rounds via an in-program scatter; the updated state is returned
+    in ``RoundOutput.assign_state``.
     """
     m = n_groups
     solve = client_lib.make_local_solver(
@@ -67,6 +95,10 @@ def make_round_executor(model, *, epochs: int, batch_size: int, lr: float,
         max_samples=max_samples)
 
     def round_fn(group_params, membership, X, Y, n, keys) -> RoundOutput:
+        state = None
+        if assign_fn is not None:
+            state = membership
+            membership = assign_fn(group_params, X, Y, n, state)
         membership = membership.astype(jnp.int32)
         # each client trains from ITS group's parameters (one gather, no loop)
         my_params = jax.tree_util.tree_map(
@@ -116,8 +148,10 @@ def make_round_executor(model, *, epochs: int, batch_size: int, lr: float,
         group_delta_flat = jax.vmap(flatten_updates)(
             jax.tree_util.tree_map(lambda a, b: a - b,
                                    new_groups, group_params))
+        if assign_fn is not None and state_update_fn is not None:
+            state = state_update_fn(state, membership, deltas, finals)
         return RoundOutput(new_groups, global_params, agg_delta,
-                           group_delta_flat, discrepancy)
+                           group_delta_flat, discrepancy, membership, state)
 
     return round_fn
 
@@ -134,8 +168,26 @@ def serial_reference_round(batch_solver, group_params_list, membership,
     so both draw identical mini-batches).
     """
     m = len(group_params_list)
-    tilde = list(group_params_list)
+    tilde, disc, _ = _serial_group_update(
+        batch_solver, group_params_list, membership, X, Y, n, keys)
+    new_list = server_lib.inter_group_aggregate(tilde, eta_g)
+    group_delta = jnp.stack([
+        flatten_updates(server_lib.tree_sub(new_list[j], group_params_list[j]))
+        for j in range(m)])
+    global_params = server_lib.tree_mean(new_list)
+    return (new_list, global_params, group_delta, disc)
+
+
+def _serial_group_update(batch_solver, group_params_list, membership,
+                         X, Y, n, keys, collect_finals: bool = False):
+    """Shared tail of the retired per-group rounds: one solver launch per
+    non-empty cluster, weighted intra-group aggregation, host discrepancy.
+    collect_finals additionally flattens each member's final local model
+    (FeSEM's host-side local_flat rebuild)."""
+    m = len(group_params_list)
+    new_list = list(group_params_list)
     disc_sum, disc_n = 0.0, 0
+    finals_by_client = {}
     for j in range(m):
         members = np.where(np.asarray(membership) == j)[0]
         if len(members) == 0:
@@ -144,16 +196,54 @@ def serial_reference_round(batch_solver, group_params_list, membership,
         deltas, finals = batch_solver(group_params_list[j], X[sel], Y[sel],
                                       n[sel], keys[sel])
         agg = server_lib.weighted_delta(deltas, n[sel])
-        tilde[j] = server_lib.apply_delta(group_params_list[j], agg)
+        new_list[j] = server_lib.apply_delta(group_params_list[j], agg)
         diffs = jax.vmap(lambda f: server_lib.tree_norm(
-            server_lib.tree_sub(f, tilde[j])))(finals)
+            server_lib.tree_sub(f, new_list[j])))(finals)
         disc_sum += float(jnp.sum(diffs))
         disc_n += len(members)
+        if collect_finals:
+            flats = np.asarray(jax.vmap(flatten_updates)(finals))
+            for mi, fi in zip(members, flats):
+                finals_by_client[int(mi)] = fi
+    return new_list, disc_sum / max(disc_n, 1), finals_by_client
 
-    new_list = server_lib.inter_group_aggregate(tilde, eta_g)
-    group_delta = jnp.stack([
-        flatten_updates(server_lib.tree_sub(new_list[j], group_params_list[j]))
-        for j in range(m)])
-    global_params = server_lib.tree_mean(new_list)
-    return (new_list, global_params, group_delta,
-            disc_sum / max(disc_n, 1))
+
+def serial_ifca_round(batch_solver, loss_fn, group_params_list,
+                      X, Y, n, keys):
+    """The retired IFCA round: host-side argmin-loss cluster estimation
+    (one loss dispatch per group) followed by one solver launch per
+    non-empty cluster — kept as the equivalence oracle for the fused
+    assignment stage and the baseline side of BENCH_round_exec.json.
+
+    loss_fn: ``client.make_loss_eval_fn`` product. Returns
+    (new group list, membership (K,) numpy, discrepancy).
+    """
+    losses = jnp.stack([loss_fn(p, X, Y, n) for p in group_params_list])
+    membership = np.asarray(jnp.argmin(losses, axis=0))
+    new_list, disc, _ = _serial_group_update(
+        batch_solver, group_params_list, membership, X, Y, n, keys)
+    return new_list, membership, disc
+
+
+def serial_fesem_round(batch_solver, group_params_list, local_flat,
+                       X, Y, n, keys):
+    """The retired FeSEM round: host numpy ℓ2 E-step over flattened centers,
+    per-group M-step (center = weighted average of members' final local
+    models), and a host rebuild of the per-client flattened-model matrix.
+
+    local_flat: (K, d_w) flattened local models of the *selected* clients.
+    Returns (new group list, membership, new local_flat, discrepancy).
+    """
+    centers = np.stack([np.asarray(flatten_updates(p))
+                        for p in group_params_list])
+    lf = np.asarray(local_flat)
+    d2 = ((lf[:, None, :] - centers[None]) ** 2).sum(-1)
+    membership = d2.argmin(1)
+    # M-step ≡ intra-group FedAvg: avg_w(finals) = center + avg_w(deltas)
+    new_list, disc, finals_by_client = _serial_group_update(
+        batch_solver, group_params_list, membership, X, Y, n, keys,
+        collect_finals=True)
+    new_local = lf.copy()
+    for mi, fi in finals_by_client.items():
+        new_local[mi] = fi
+    return new_list, membership, new_local, disc

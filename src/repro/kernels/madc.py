@@ -28,6 +28,21 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def madc_tiles(n: int) -> tuple:
+    """(block_n, block_z) picked from n instead of fixed 128s.
+
+    block_n (sublane) rounds n up to the fp32 tile's 8-row granule, capped
+    at 128; block_z (lane) rounds up to the mandatory 128-lane granule,
+    capped at 512 (two (bn, bz) input tiles + the (sub, bn, bz) broadcast
+    chunk stay well under VMEM at the cap). Small n therefore stops padding
+    to a full 128x128 tile — at n=32 the kernel does 16x less tile work
+    than the old fixed blocks.
+    """
+    bn = min(128, -(-n // 8) * 8)
+    bz = min(512, -(-n // 128) * 128)
+    return bn, bz
+
+
 def _kernel(mi_ref, mj_ref, out_ref, acc_ref, *, nz: int, n: int,
             block_n: int, block_z: int, sub_n: int):
     i, j, z = pl.program_id(0), pl.program_id(1), pl.program_id(2)
@@ -60,14 +75,18 @@ def _kernel(mi_ref, mj_ref, out_ref, acc_ref, *, nz: int, n: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("block_n", "block_z", "interpret"))
-def madc_block(M, *, block_n: int = 128, block_z: int = 128,
+def madc_block(M, *, block_n: int | None = None, block_z: int | None = None,
                interpret: bool = True):
     """M: (n, n) cosine similarities -> (n, n) MADC dissimilarities (fp32).
 
-    Wrapper pads rows to block_n and columns to block_z; padded rows are
-    sliced away, padded z columns are masked inside the kernel.
+    Block shapes default to ``madc_tiles(n)`` — sized from n, not fixed
+    constants. Wrapper pads rows to block_n and columns to block_z; padded
+    rows are sliced away, padded z columns are masked inside the kernel.
     """
     n = M.shape[0]
+    tn, tz = madc_tiles(n)
+    block_n = tn if block_n is None else block_n
+    block_z = tz if block_z is None else block_z
     rn = (n + block_n - 1) // block_n * block_n
     cn = (n + block_z - 1) // block_z * block_z
     Mp = jnp.pad(M.astype(jnp.float32), ((0, rn - n), (0, cn - n)))

@@ -18,6 +18,21 @@ from repro.kernels.swa_attention import swa_attention
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
+# Measured MADC kernel/reference crossovers (BENCH_clustering.json): below
+# these the O(n³)-broadcast reference is faster than the kernel's tiling
+# overhead, so measures.madc(use_kernel=True) falls back to it. Interpret
+# mode executes the grid step-by-step in Python — there the kernel only
+# pays off once the reference's (n, n, n) cube itself becomes the problem
+# (n=512 -> 512 MB fp32); through Mosaic the crossover is the tile scale.
+MADC_CROSSOVER_COMPILED_N = 128
+MADC_CROSSOVER_INTERPRET_N = 512
+
+
+def madc_crossover_n() -> int:
+    """Active kernel-vs-reference crossover for the current backend mode."""
+    return (MADC_CROSSOVER_INTERPRET_N if _INTERPRET
+            else MADC_CROSSOVER_COMPILED_N)
+
 
 def cosine_block(dW, V, **kw):
     """Fused cosine-similarity block E = K(ΔW, Vᵀ) (paper eq. 8)."""

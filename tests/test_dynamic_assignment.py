@@ -1,0 +1,199 @@
+"""Fused dynamic-assignment rounds (IFCA argmin-loss, FeSEM ℓ2 E-step) vs
+the retired estimate-then-loop baselines (fed/rounds.py serial oracles).
+
+The executor's in-program assignment stage must reproduce the host-side
+per-group loop on membership, group parameters, persistent state, and the
+discrepancy metric — including rounds where a cluster gets zero members.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fed import client as client_lib
+from repro.fed import rounds, server as server_lib
+from repro.fed.fesem import FeSEMTrainer, fesem_state_update, make_fesem_assign
+from repro.fed.ifca import IFCATrainer, make_ifca_assign
+from repro.models.modules import flatten_updates
+from repro.models.paper_models import mclr
+
+
+def _setup(m=3, K=12, max_n=20, dim=6, n_classes=4, seed=0, spread=0.3):
+    """Group models far apart + each client's labels drawn from one group's
+    predictions, so argmin-loss/argmin-ℓ2 spread clients across clusters."""
+    key = jax.random.PRNGKey(seed)
+    model = mclr(dim, n_classes)
+    params = model.init(key)
+    ks = jax.random.split(key, m + 3)
+    gp_list = [jax.tree_util.tree_map(
+        lambda l, k=ks[j]: l + spread * jax.random.normal(k, l.shape),
+        params) for j in range(m)]
+    X = jax.random.normal(ks[m], (K, max_n, dim))
+    # client i's labels come from group (i % m)'s model -> that group's CE
+    # is lowest, giving every cluster members under IFCA's estimate
+    Y = jnp.stack([
+        jnp.argmax(model.apply(gp_list[i % m], X[i]), -1)
+        for i in range(K)])
+    n = jnp.full((K,), max_n, jnp.int32)
+    keys = jax.random.split(ks[m + 1], K)
+    return model, gp_list, X, Y, n, keys
+
+
+def _assert_groups_close(stacked, ref_list, atol=1e-5):
+    for j in range(len(ref_list)):
+        got = server_lib.tree_index(stacked, j)
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(ref_list[j])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=atol, rtol=atol)
+
+
+class TestFusedIFCA:
+    def _run_both(self, model, gp_list, X, Y, n, keys, *, epochs=2, batch=5):
+        m, max_n = len(gp_list), X.shape[1]
+        fused = jax.jit(rounds.make_round_executor(
+            model, epochs=epochs, batch_size=batch, lr=0.05, mu=0.0,
+            n_groups=m, max_samples=max_n,
+            assign_fn=make_ifca_assign(model)))
+        out = fused(rounds.stack_trees(gp_list), None, X, Y, n, keys)
+        solver = client_lib.make_batch_solver(
+            model, epochs=epochs, batch_size=batch, lr=0.05, mu=0.0,
+            max_samples=max_n)
+        loss_fn = client_lib.make_loss_eval_fn(model)
+        ref = rounds.serial_ifca_round(solver, loss_fn, gp_list, X, Y, n,
+                                       keys)
+        return out, ref
+
+    def test_matches_serial_oracle(self):
+        args = _setup()
+        out, (ref_groups, ref_mem, ref_disc) = self._run_both(*args)
+        assert np.array_equal(np.asarray(out.membership), ref_mem)
+        assert len(np.unique(ref_mem)) == 3      # every cluster estimated
+        _assert_groups_close(out.group_params, ref_groups)
+        assert float(out.discrepancy) == pytest.approx(ref_disc, abs=1e-4)
+
+    def test_zero_member_cluster(self):
+        """A cluster no client picks keeps its parameters unchanged."""
+        model, gp_list, X, Y, n, keys = _setup(m=4, K=6)
+        # labels from groups 0..2 only -> cluster 3 attracts nobody
+        Y = jnp.stack([
+            jnp.argmax(model.apply(gp_list[i % 3], X[i]), -1)
+            for i in range(6)])
+        out, (ref_groups, ref_mem, _) = self._run_both(
+            model, gp_list, X, Y, n, keys)
+        assert np.array_equal(np.asarray(out.membership), ref_mem)
+        assert 3 not in ref_mem
+        _assert_groups_close(out.group_params, ref_groups)
+        for a, b in zip(
+                jax.tree_util.tree_leaves(
+                    server_lib.tree_index(out.group_params, 3)),
+                jax.tree_util.tree_leaves(gp_list[3])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+class TestFusedFeSEM:
+    def _run_both(self, model, gp_list, local_flat, X, Y, n, keys, *,
+                  epochs=2, batch=5):
+        m, max_n = len(gp_list), X.shape[1]
+        K = X.shape[0]
+        fused = jax.jit(rounds.make_round_executor(
+            model, epochs=epochs, batch_size=batch, lr=0.05, mu=0.0,
+            n_groups=m, max_samples=max_n, assign_fn=make_fesem_assign(),
+            state_update_fn=fesem_state_update))
+        state = {"local_flat": jnp.asarray(local_flat),
+                 "idx": jnp.arange(K, dtype=jnp.int32)}
+        out = fused(rounds.stack_trees(gp_list), state, X, Y, n, keys)
+        solver = client_lib.make_batch_solver(
+            model, epochs=epochs, batch_size=batch, lr=0.05, mu=0.0,
+            max_samples=max_n)
+        ref = rounds.serial_fesem_round(solver, gp_list, local_flat, X, Y,
+                                        n, keys)
+        return out, ref
+
+    def _local_flat(self, gp_list, K):
+        """Each client's last local model near group (i % m)'s center."""
+        m = len(gp_list)
+        centers = np.stack([np.asarray(flatten_updates(p)) for p in gp_list])
+        return np.stack([centers[i % m] + 1e-3 for i in range(K)])
+
+    def test_matches_serial_oracle(self):
+        model, gp_list, X, Y, n, keys = _setup()
+        lf = self._local_flat(gp_list, X.shape[0])
+        out, (ref_groups, ref_mem, ref_local, ref_disc) = self._run_both(
+            model, gp_list, lf, X, Y, n, keys)
+        assert np.array_equal(np.asarray(out.membership), ref_mem)
+        assert len(np.unique(ref_mem)) == 3
+        _assert_groups_close(out.group_params, ref_groups)
+        np.testing.assert_allclose(
+            np.asarray(out.assign_state["local_flat"]), ref_local, atol=1e-5)
+        assert float(out.discrepancy) == pytest.approx(ref_disc, abs=1e-4)
+
+    def test_zero_member_cluster_keeps_center(self):
+        model, gp_list, X, Y, n, keys = _setup(m=4, K=6)
+        centers = np.stack([np.asarray(flatten_updates(p)) for p in gp_list])
+        lf = np.stack([centers[i % 3] + 1e-3 for i in range(6)])  # skip 3
+        out, (ref_groups, ref_mem, _, _) = self._run_both(
+            model, gp_list, lf, X, Y, n, keys)
+        assert np.array_equal(np.asarray(out.membership), ref_mem)
+        assert 3 not in ref_mem
+        _assert_groups_close(out.group_params, ref_groups)
+        for a, b in zip(
+                jax.tree_util.tree_leaves(
+                    server_lib.tree_index(out.group_params, 3)),
+                jax.tree_util.tree_leaves(gp_list[3])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    def test_scatter_only_touches_selected_rows(self):
+        """The in-program scatter updates exactly the selected clients'
+        rows of the persistent local_flat matrix."""
+        model, gp_list, X, Y, n, keys = _setup(K=4)
+        N = 10
+        centers = np.stack([np.asarray(flatten_updates(p)) for p in gp_list])
+        lf_all = np.tile(centers[0], (N, 1)).astype(np.float32)
+        idx = np.asarray([1, 4, 7, 9])
+        fused = jax.jit(rounds.make_round_executor(
+            model, epochs=1, batch_size=5, lr=0.05, mu=0.0, n_groups=3,
+            max_samples=X.shape[1], assign_fn=make_fesem_assign(),
+            state_update_fn=fesem_state_update))
+        state = {"local_flat": jnp.asarray(lf_all),
+                 "idx": jnp.asarray(idx, jnp.int32)}
+        out = fused(rounds.stack_trees(gp_list), state, X, Y, n, keys)
+        new_lf = np.asarray(out.assign_state["local_flat"])
+        untouched = np.setdiff1d(np.arange(N), idx)
+        np.testing.assert_allclose(new_lf[untouched], lf_all[untouched])
+        assert not np.allclose(new_lf[idx], lf_all[idx])
+
+
+class TestTrainerDispatch:
+    @pytest.mark.parametrize("cls", [IFCATrainer, FeSEMTrainer])
+    def test_round_is_one_executor_dispatch(self, cls, tiny_model,
+                                            tiny_fed_data, fast_cfg):
+        """IFCA/FeSEM rounds go through the fused executor exactly once —
+        no per-group Python loop, no separate estimation dispatch."""
+        tr = cls(tiny_model, tiny_fed_data, fast_cfg)
+        calls = []
+        real = tr._round_executor()
+
+        def spy(*args, **kw):
+            calls.append(1)
+            return real(*args, **kw)
+
+        tr._round_exec = spy
+        tr.round(0)
+        assert len(calls) == 1
+
+    def test_fesem_local_flat_stays_on_device(self, tiny_model,
+                                              tiny_fed_data, fast_cfg):
+        tr = FeSEMTrainer(tiny_model, tiny_fed_data, fast_cfg)
+        assert isinstance(tr.local_flat, jax.Array)
+        tr.round(0)
+        assert isinstance(tr.local_flat, jax.Array)
+        assert tr.local_flat.shape[0] == tiny_fed_data.n_clients
+
+    def test_ifca_membership_synced_from_round_output(self, tiny_model,
+                                                      tiny_fed_data,
+                                                      fast_cfg):
+        tr = IFCATrainer(tiny_model, tiny_fed_data, fast_cfg)
+        tr.round(0)
+        assert np.any(tr.membership >= 0)
+        assert np.all(tr.membership[tr.membership >= 0] < fast_cfg.n_groups)

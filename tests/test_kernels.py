@@ -83,10 +83,38 @@ class TestMADCBlockKernel:
         np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
 
     def test_measures_delegation(self):
-        """measures.madc(use_kernel=True) routes through the Pallas path."""
+        """measures.madc(use_kernel=True, min_kernel_n=0) forces the Pallas
+        path and matches the reference."""
         M = self._cosine(33, seed=2)
-        np.testing.assert_allclose(measures.madc(M, use_kernel=True),
-                                   measures.madc(M), atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(
+            measures.madc(M, use_kernel=True, min_kernel_n=0),
+            measures.madc(M), atol=2e-5, rtol=2e-5)
+
+    def test_small_n_falls_back_below_crossover(self):
+        """Below the measured crossover the dispatch uses the reference —
+        use_kernel=True must never be slower there (it IS the reference)."""
+        from repro.kernels import madc as madc_mod
+        M = self._cosine(33, seed=2)
+        calls = []
+        real = ops.madc_block
+        ops.madc_block = lambda *a, **k: calls.append(1) or real(*a, **k)
+        try:
+            out = measures.madc(M, use_kernel=True)
+        finally:
+            ops.madc_block = real
+        assert calls == []                  # n=33 < crossover -> no kernel
+        np.testing.assert_allclose(out, measures.madc(M), atol=1e-6)
+        assert ops.madc_crossover_n() >= madc_mod.madc_tiles(33)[1]
+
+    def test_tiles_follow_n(self):
+        from repro.kernels.madc import madc_tiles
+        assert madc_tiles(32) == (32, 128)      # no padding to 128 rows
+        assert madc_tiles(33) == (40, 128)      # 8-row sublane granule
+        assert madc_tiles(200) == (128, 256)    # 128-lane z granule
+        assert madc_tiles(1000) == (128, 512)   # caps
+        for n in (8, 60, 100, 130):
+            bn, bz = madc_tiles(n)
+            assert bn % 8 == 0 and bz % 128 == 0
 
     def test_symmetric_zero_diag(self):
         D = np.asarray(ops.madc_block(self._cosine(40, seed=3)))

@@ -1,0 +1,80 @@
+"""Sharded client axis in the serial trainers (fed/parallel.py helpers).
+
+The executor's mesh path (client axis sharded over "data") must agree with
+the 1-device jit path. Multi-device coverage runs in a subprocess with
+forced host devices — the main test process must keep seeing the single
+real CPU device (see conftest.py).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+
+from repro.fed import parallel as fp
+
+_DRIVER = r"""
+import json, jax
+from repro.data.generators import mnist_like
+from repro.models.paper_models import mclr
+from repro.fed.engine import FedAvgTrainer, FedConfig
+from repro.fed.fesem import FeSEMTrainer
+from repro.fed.ifca import IFCATrainer
+
+data = mnist_like(seed=0, n_clients=16, classes_per_client=2,
+                  total_train=1200, dim=16)
+model = mclr(16, 10)
+cfg = FedConfig(n_rounds=2, clients_per_round=8, local_epochs=3,
+                batch_size=10, lr=0.05, n_groups=2, pretrain_scale=2, seed=0)
+out = {"devices": jax.device_count()}
+for cls in (FedAvgTrainer, IFCATrainer, FeSEMTrainer):
+    tr = cls(model, data, cfg)
+    out[cls.framework + "_meshed"] = tr.mesh is not None
+    h = tr.run(2)
+    out[cls.framework] = [[r.weighted_acc, r.discrepancy] for r in h.rounds]
+print(json.dumps(out))
+"""
+
+
+def _run_driver(n_devices: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={n_devices}")
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _DRIVER], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+class TestShardingHelpers:
+    def test_default_mesh_is_none_on_single_device(self):
+        assert jax.device_count() == 1      # conftest contract
+        assert fp.default_data_mesh() is None
+
+    def test_sharded_executor_single_device_is_plain_jit(self, tiny_model,
+                                                         tiny_fed_data,
+                                                         fast_cfg):
+        from repro.fed.engine import FedAvgTrainer
+        tr = FedAvgTrainer(tiny_model, tiny_fed_data, fast_cfg)
+        assert tr.mesh is None
+        m = tr.round(0)
+        assert np.isfinite(m.weighted_acc)
+
+
+class TestMultiDeviceEquivalence:
+    def test_sharded_trainers_match_single_device(self):
+        """4-way client-axis sharding reproduces the 1-device trajectories
+        for the static (FedAvg) and dynamic (IFCA/FeSEM) executors."""
+        single = _run_driver(1)
+        sharded = _run_driver(4)
+        assert single["devices"] == 1 and sharded["devices"] == 4
+        for fw in ("fedavg", "ifca", "fesem"):
+            assert not single[fw + "_meshed"]
+            assert sharded[fw + "_meshed"]
+            np.testing.assert_allclose(np.asarray(single[fw]),
+                                       np.asarray(sharded[fw]),
+                                       atol=2e-3,
+                                       err_msg=f"{fw} diverged under mesh")
