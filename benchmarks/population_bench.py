@@ -1,0 +1,126 @@
+"""Benchmark: streamed population engine vs the pinned path.
+
+Two operating points, both persisted to BENCH_population.json (>2x
+regression gate in benchmarks/run.py, included under --quick):
+
+  * N_pin (10^4 full / 3·10^3 quick): the largest scale where pinning the
+    whole padded population on device is still practical — round time of
+    the streamed ClientStore cohort path vs the pinned path, same compiled
+    executor. Watched ratio ``streamed_vs_pinned`` (pinned/streamed; 1.0 =
+    streaming is free, <1 = streaming overhead).
+  * N_stream (10^5 full / 2·10^4 quick): population pinned paths cannot
+    materialize on device — streamed rounds with double-buffered prefetch
+    vs the same store with prefetch disabled (synchronous select+gather+H2D
+    inside the round). Watched ratio ``prefetch_speedup`` (no-prefetch /
+    prefetch round time; >1 = the cohort transfer hides behind compute).
+
+Ratios are interleaved per-call minima (bench_io.interleaved_best), so the
+gate is stable across host load.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_io import interleaved_best, record_run
+from repro.data.generators import virtual_synthetic
+from repro.fed.engine import FedAvgTrainer, FedConfig
+from repro.fed.population import Population, PopulationConfig
+from repro.models.paper_models import mclr
+
+
+def _cfg(quick: bool, seed: int = 0) -> FedConfig:
+    return FedConfig(clients_per_round=50, local_epochs=2 if quick else 4,
+                     batch_size=10, lr=0.05, seed=seed)
+
+
+def _streamed_trainer(store, cfg, *, prefetch: int, seed_shift: int = 0):
+    pop = Population(store, PopulationConfig(
+        prefetch=prefetch, eval_clients=64, eval_batch=64))
+    return FedAvgTrainer(mclr(60, 10), None,
+                         _cfg_replace(cfg, seed_shift), population=pop)
+
+
+def _cfg_replace(cfg, seed_shift):
+    import dataclasses
+    return dataclasses.replace(cfg, seed=cfg.seed + seed_shift)
+
+
+def _round_thunk(tr):
+    """One communication round minus evaluation — select + feed (the only
+    part the two modes differ in) + the compiled executor. Evaluation is
+    excluded because the pinned path evaluates all N clients while the
+    streamed path subsamples; timing it would bias the watched ratio."""
+    def thunk():
+        idx = tr._select()
+        x, y, n = tr._client_batch(idx)
+        tr.key, sk = jax.random.split(tr.key)
+        keys = jax.random.split(sk, len(idx))
+        out = tr._round_executor()(
+            jax.tree_util.tree_map(lambda p: p[None], tr.params),
+            jnp.zeros(len(idx), jnp.int32), x, y, n, keys)
+        tr.params = out.global_params
+        jax.block_until_ready(
+            jax.tree_util.tree_leaves(out.global_params)[0])
+    return thunk
+
+
+def main(quick: bool = False):
+    N_pin = 3_000 if quick else 10_000
+    N_stream = 20_000 if quick else 100_000
+    reps = 4 if quick else 8
+    cfg = _cfg(quick)
+    metrics = {"quick": quick, "N_pin": N_pin, "N_stream": N_stream,
+               "K": cfg.clients_per_round, "epochs": cfg.local_epochs}
+
+    # -- streamed vs pinned at the largest pinnable scale ------------------
+    store = virtual_synthetic(n_clients=N_pin, mean_size=30, max_size=60)
+    data = store.materialize()          # the allocation streaming avoids
+    pinned = FedAvgTrainer(mclr(60, 10), data, cfg)
+    streamed = _streamed_trainer(data.store(), cfg, prefetch=2)
+    pin_us, str_us = interleaved_best(
+        [_round_thunk(pinned), _round_thunk(streamed)], reps=reps)
+    streamed.close()
+    metrics.update(pinned_round_us=pin_us, streamed_round_us=str_us,
+                   streamed_vs_pinned=pin_us / max(str_us, 1e-9))
+
+    # -- prefetch overlap at the beyond-pinnable scale ---------------------
+    # two independent virtual stores so the lazy client caches do not
+    # interact; same seed -> identical populations and cohort streams
+    s0 = virtual_synthetic(n_clients=N_stream, mean_size=30, max_size=60)
+    s2 = virtual_synthetic(n_clients=N_stream, mean_size=30, max_size=60)
+    nobuf = _streamed_trainer(s0, cfg, prefetch=0)
+    buffered = _streamed_trainer(s2, cfg, prefetch=2)
+    no_us, pre_us = interleaved_best(
+        [_round_thunk(nobuf), _round_thunk(buffered)], reps=reps)
+    nobuf.close()
+    buffered.close()
+    metrics.update(noprefetch_round_us=no_us, prefetch_round_us=pre_us,
+                   prefetch_speedup=no_us / max(pre_us, 1e-9),
+                   stream_clients_generated=s2.generated_clients)
+
+    print(f"\n# Population engine (K={cfg.clients_per_round}, "
+          f"E={cfg.local_epochs})")
+    print(f"  pinned vs streamed @N={N_pin}: {pin_us:.0f}us vs "
+          f"{str_us:.0f}us per round -> streamed_vs_pinned="
+          f"{metrics['streamed_vs_pinned']:.2f}x")
+    print(f"  prefetch overlap  @N={N_stream}: sync {no_us:.0f}us vs "
+          f"double-buffered {pre_us:.0f}us -> "
+          f"{metrics['prefetch_speedup']:.2f}x "
+          f"({s2.generated_clients} of {N_stream} clients ever generated)")
+
+    regression, details = record_run(
+        "BENCH_population.json", metrics,
+        watch=[("streamed_vs_pinned", "min"), ("prefetch_speedup", "min")])
+    if regression:
+        print("REGRESSION:", "; ".join(details))
+    return {"streamed_vs_pinned": round(metrics["streamed_vs_pinned"], 2),
+            "prefetch_speedup": round(metrics["prefetch_speedup"], 2),
+            "regression": regression, "regression_details": details,
+            **metrics}
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(0 if not main(quick="--quick" in sys.argv).get("regression")
+             else 1)

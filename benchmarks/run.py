@@ -4,6 +4,8 @@
   table3     framework comparison + ablations  (paper Table 3)
   round_exec fused round executor vs the retired per-group loops
              (static + IFCA/FeSEM dynamic assignment, m=5/K=50)
+  population streamed ClientStore cohorts vs the pinned stacks +
+             double-buffered prefetch overlap (N=10^4-10^5 virtual clients)
   fig5       EDC vs MADC linearity             (paper Fig. 5)
   cost       clustering-measure cost           (paper §3.3 complexity claim)
   roofline   per-(arch×shape) roofline terms   (deliverable g)
@@ -16,13 +18,14 @@
 Exit status is nonzero when a bench fails OR when a bench reports a perf
 regression >2x against its committed BENCH_*.json baseline (cost watches
 the MADC dispatch's relative speed; round_exec the static/IFCA/FeSEM
-executor speedups). Gate failures print a per-entry diff — which bench,
-crash vs watched-metric regression, best recorded -> measured — before the
-nonzero exit. ``--quick`` always includes the round_exec suite, even under
-``--only``:
+executor speedups; population the streamed-vs-pinned round-time ratio and
+the prefetch-overlap speedup). Gate failures print a per-entry diff —
+which bench, crash vs watched-metric regression, best recorded ->
+measured — before the nonzero exit. ``--quick`` always includes the
+round_exec and population suites, even under ``--only``:
 
 ``python -m benchmarks.run --quick --only cost,table3``  — the CI perf gate
-(effectively cost,table3,round_exec)
+(effectively cost,table3,round_exec,population)
 """
 from __future__ import annotations
 
@@ -35,12 +38,14 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import (clustering_cost, eta_g_sweep, fig5_edc_madc,
-                        roofline, table1_heterogeneity, table3_frameworks)
+                        population_bench, roofline, table1_heterogeneity,
+                        table3_frameworks)
 
 BENCHES = {
     "table1": table1_heterogeneity.main,
     "table3": table3_frameworks.main,
     "round_exec": table3_frameworks.round_executor_bench,
+    "population": population_bench.main,
     "fig5": fig5_edc_madc.main,
     "cost": clustering_cost.main,
     "eta_g": eta_g_sweep.main,
@@ -58,9 +63,12 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     names = list(BENCHES) if not args.only else args.only.split(",")
-    if args.quick and "round_exec" not in names:
-        # the CI gate must always exercise the round-executor suite
-        names.append("round_exec")
+    if args.quick:
+        # the CI gate must always exercise the round-executor and
+        # population (streamed cohort) suites
+        for required in ("round_exec", "population"):
+            if required not in names:
+                names.append(required)
     print("name,us_per_call,derived")
     rc = 0
     report = {}

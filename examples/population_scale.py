@@ -1,0 +1,71 @@
+"""Population-scale FedGroup: 50k synthetic clients streamed through the
+ClientStore cohort path — nothing population-sized ever reaches the device.
+
+The population starts with 60% of its clients active; every round a
+Poisson batch of newcomers arrives (FlexCFL's framework stress test) and a
+diurnal availability trace gates who can participate. Newcomers are routed
+by the paper's eq.-9 client cold start the round they first show up, so
+the cold-start path runs *continuously*, not once — watch the per-round
+cohort / newcomer / cold-start counts.
+
+  PYTHONPATH=src python examples/population_scale.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core.fedgroup import FedGroupTrainer
+from repro.data.generators import virtual_synthetic
+from repro.fed.engine import FedConfig
+from repro.fed.population import Population, PopulationConfig
+from repro.models.paper_models import mclr
+
+N = 50_000
+ROUNDS = 12
+
+
+def main():
+    store = virtual_synthetic(n_clients=N, mean_size=30, max_size=60)
+    pop = Population(store, PopulationConfig(
+        sampler="size",                 # busy devices report more data
+        availability="diurnal", period=12, duty=0.5,
+        initial_active=int(0.6 * N), arrival_rate=15.0,
+        prefetch=2))
+    cfg = FedConfig(n_rounds=ROUNDS, clients_per_round=60, local_epochs=4,
+                    batch_size=10, lr=0.05, n_groups=5, pretrain_scale=10,
+                    seed=0)
+    tr = FedGroupTrainer(mclr(60, 10), None, cfg, population=pop)
+
+    print(f"population: {N} clients ({pop.cfg.initial_active} initially "
+          f"active), diurnal period {pop.cfg.period}, "
+          f"~{pop.cfg.arrival_rate:.0f} arrivals/round")
+    print(f"{'round':>5} {'cohort':>6} {'new':>5} {'cold':>5} "
+          f"{'assigned':>8} {'acc':>6} {'loss':>6}  s/round")
+    t_prev = time.time()
+    for t in range(ROUNDS):
+        m = tr.round(t)
+        dt, t_prev = time.time() - t_prev, time.time()
+        # per-cohort arrival count travels on the Cohort itself — the
+        # scheduler has already prefetched ahead of the consumed round
+        print(f"{t:>5} {len(pop._cohort.idx):>6} "
+              f"{pop._cohort.n_new:>5} {tr.last_cold:>5} "
+              f"{int((tr.membership >= 0).sum()):>8} "
+              f"{m.weighted_acc:>6.3f} {m.mean_loss:>6.3f}  {dt:.2f}")
+    tr.close()
+
+    touched = store.generated_clients
+    print(f"\nclients ever materialized: {touched} / {N} "
+          f"({100 * touched / N:.2f}% — the stacked arrays the pinned path "
+          f"would have uploaded never exist)")
+    print(f"state-table rows held: {pop.state.touched_rows()} "
+          f"(pre-training direction cache)")
+    still_cold = int((tr.membership < 0).sum())
+    print(f"cold (never sampled or not yet arrived): {still_cold}")
+
+
+if __name__ == "__main__":
+    main()

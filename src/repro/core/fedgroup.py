@@ -21,6 +21,12 @@ Group state is an m-stacked pytree (leading axis = group) and every round is
 ONE device dispatch through ``fed.rounds.make_round_executor`` — the serial
 per-group solver loop of the seed implementation survives only as the
 equivalence/benchmark oracle ``fed.rounds.serial_reference_round``.
+
+In ``population=`` mode (``fed.population``) the trainer streams scheduled
+cohorts from a host-resident ``ClientStore``; the newcomer *arrival
+process* then feeds the eq.-9 client cold start round after round — the
+regime the paper's cold-start mechanism is designed for — with the
+pre-training directions cached in the persistent per-client state table.
 """
 from __future__ import annotations
 
@@ -40,8 +46,9 @@ from repro.models.modules import flatten_updates
 class FedGroupTrainer(GroupedTrainer):
     framework = "fedgroup"
 
-    def __init__(self, model, data, cfg: FedConfig, mesh=None):
-        super().__init__(model, data, cfg, mesh=mesh)
+    def __init__(self, model, data, cfg: FedConfig, mesh=None,
+                 population=None):
+        super().__init__(model, data, cfg, mesh=mesh, population=population)
         # group state: pytree stacked over the group axis + (m, d_w) latest
         # flattened update direction Δw^(g)
         self.group_params = jax.tree_util.tree_map(
@@ -51,8 +58,9 @@ class FedGroupTrainer(GroupedTrainer):
         # pre-training does not occupy a whole round)
         self.pretrain_solver = client_lib.make_batch_solver(
             model, epochs=1, batch_size=cfg.batch_size, lr=cfg.lr, mu=0.0,
-            max_samples=data.x_train.shape[1])
+            max_samples=self._max_samples)
         self.cold_started = False
+        self.last_cold = 0          # newcomers cold-started last round
 
     def _exec_spec(self) -> dict:
         return {"n_groups": self.m, "eta_g": self.cfg.eta_g}
@@ -62,8 +70,16 @@ class FedGroupTrainer(GroupedTrainer):
     # ------------------------------------------------------------------
     def group_cold_start(self):
         cfg = self.cfg
-        n_pre = min(cfg.pretrain_scale * self.m, self.data.n_clients)
-        pre_idx = self.rng.choice(self.data.n_clients, n_pre, replace=False)
+        if self.population is not None:
+            # pre-train from the *currently active* population only — the
+            # not-yet-arrived clients are exactly the ones the eq.-9 client
+            # cold start will route, round by round, as they appear
+            pool = self.population.scheduler.active_ids()
+        else:
+            pool = self.n_clients
+        pool_size = pool if isinstance(pool, int) else len(pool)
+        n_pre = min(cfg.pretrain_scale * self.m, pool_size)
+        pre_idx = self.rng.choice(pool, n_pre, replace=False)
         deltas, _, _ = self._solve(self.params, pre_idx)
         self.comm_params += 2 * len(pre_idx) * self.model_size
         dW = jax.vmap(flatten_updates)(deltas)                 # (n_pre, d_w)
@@ -123,6 +139,10 @@ class FedGroupTrainer(GroupedTrainer):
         keys = jax.random.split(sk, len(cold_idx))
         deltas, _ = self.pretrain_solver(self.params, x, y, n, keys)
         dpre = jax.vmap(flatten_updates)(deltas)               # (c, d_w)
+        if self.population is not None:
+            # cache the pre-training directions in the persistent state
+            # table (newcomer analytics / re-clustering reuse them)
+            self.population.state.set_pretrain_dir(cold_idx, np.asarray(dpre))
         sim = measures.cosine_similarity_matrix(dpre, self.group_delta)
         dis = (-sim + 1.0) / 2.0                               # (c, m)
         self.membership[cold_idx] = np.asarray(jnp.argmin(dis, axis=1))
@@ -136,6 +156,7 @@ class FedGroupTrainer(GroupedTrainer):
 
         idx = self._select()
         cold = idx[self.membership[idx] < 0]
+        self.last_cold = len(cold)
         # cold start: 1 global model down + 1 pretrain update up per newcomer
         self.comm_params += 2 * len(cold) * self.model_size
         self.client_cold_start(cold)
@@ -154,7 +175,7 @@ class FedGroupTrainer(GroupedTrainer):
         self.params = out.global_params
 
         acc = self.evaluate_groups()
-        m = RoundMetrics(t, acc, 0.0, float(out.discrepancy))
+        m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy))
         self.history.add(m)
         return m
 
@@ -163,7 +184,8 @@ class FedGrouProxTrainer(FedGroupTrainer):
     """FedGroup + FedProx local solver (the paper's FedGrouProx)."""
     framework = "fedgrouprox"
 
-    def __init__(self, model, data, cfg: FedConfig, mesh=None):
+    def __init__(self, model, data, cfg: FedConfig, mesh=None,
+                 population=None):
         if cfg.mu <= 0:
             cfg = dataclasses.replace(cfg, mu=0.01)
-        super().__init__(model, data, cfg, mesh=mesh)
+        super().__init__(model, data, cfg, mesh=mesh, population=population)

@@ -46,6 +46,12 @@ class FederatedData:
             "y_test": self.y_test[i, : self.n_test[i]],
         }
 
+    def store(self):
+        """This population behind the host-resident ``ClientStore`` API —
+        the streamed trainers' small-N backing (``fed.store``)."""
+        from repro.fed.store import ArrayClientStore
+        return ArrayClientStore(self)
+
 
 def power_law_sizes(rng: np.random.Generator, n_clients: int, total: int,
                     alpha: float = 1.5, min_size: int = 10,

@@ -1,11 +1,23 @@
 """Round-based federated training engines: FedAvg / FedProx base trainer.
 
-The trainer pins the padded per-client train/eval stacks on device once at
-init and vmaps the local solver over the selected-client axis — the
-CPU/TPU-agnostic core the other frameworks build on. When more than one
-device is visible the round executor's client axis is sharded over a
-"data" mesh (``fed.parallel.make_sharded_executor``); a single device gets
-the plain jit path.
+Two feeding modes share one compiled round program:
+
+  * pinned (default, small N): the padded per-client train/eval stacks are
+    uploaded once at init and selection is a device gather — the fast path
+    and the streamed path's equivalence oracle.
+  * ``population=`` (``fed.population.Population``): the population stays
+    host-resident in a ``fed.store.ClientStore`` and only the scheduled
+    round cohort is streamed to device, double-buffered so the next
+    cohort's H2D transfer overlaps the running round; evaluation streams
+    fixed-size client blocks. Population size is then bounded by host
+    memory (or disk, with memmapped shards) instead of device memory.
+
+When more than one device is visible the round executor's client axis is
+sharded over a "data" mesh (``fed.parallel.make_sharded_executor``); a
+single device gets the plain jit path. Cohort *selection* draws from a
+dedicated ``select_rng`` stream (distinct from the cold-start/ablation
+``rng``), so a same-seed streamed population reproduces the pinned
+trainer's selection sequence exactly.
 """
 from __future__ import annotations
 
@@ -76,14 +88,31 @@ class FedAvgTrainer:
 
     framework = "fedavg"
 
-    def __init__(self, model: ModelSpec, data: FederatedData, cfg: FedConfig,
-                 mesh=None):
-        self.model, self.data, self.cfg = model, data, cfg
+    def __init__(self, model: ModelSpec, data: FederatedData | None,
+                 cfg: FedConfig, mesh=None, population=None):
+        self.model, self.cfg = model, cfg
+        self.population = population
         self.rng = np.random.default_rng(cfg.seed)
+        # cohort sampling draws from its own derived stream: the streamed
+        # scheduler (same seed) replays the identical selection sequence,
+        # and selection is decorrelated from the cold-start draws above
+        from repro.fed.store import SELECT_STREAM
+        self.select_rng = np.random.default_rng([cfg.seed, SELECT_STREAM])
         self.key = jax.random.PRNGKey(cfg.seed)
+        if population is not None:
+            self.data = data                    # optional at population scale
+            self.n_clients = population.store.n_clients
+            max_samples = population.store.max_train
+        else:
+            if data is None:
+                raise ValueError("pass data= (pinned) or population=")
+            self.data = data
+            self.n_clients = data.n_clients
+            max_samples = data.x_train.shape[1]
+        self._max_samples = max_samples
         self.solver = client_lib.make_batch_solver(
             model, epochs=cfg.local_epochs, batch_size=cfg.batch_size,
-            lr=cfg.lr, mu=cfg.mu, max_samples=data.x_train.shape[1])
+            lr=cfg.lr, mu=cfg.mu, max_samples=max_samples)
         self.eval_fn = client_lib.make_eval_fn(model)
         self.params = model.init(jax.random.PRNGKey(cfg.seed + 1))
         self.history = History()
@@ -93,12 +122,17 @@ class FedAvgTrainer:
         self._round_exec = None     # lazily-built single-dispatch round
         # client axis sharded over "data" on multi-device (None = plain jit)
         self.mesh = parallel_lib.default_data_mesh() if mesh is None else mesh
-        # pin the padded per-client stacks on device once — selection is a
-        # device gather, not a fresh host->device upload every round
-        self._train_stack = tuple(jnp.asarray(a) for a in
-                                  (data.x_train, data.y_train, data.n_train))
-        self._test_stack = tuple(jnp.asarray(a) for a in
-                                 (data.x_test, data.y_test, data.n_test))
+        if population is not None:
+            population.attach(cfg, self.mesh)
+            self._train_stack = self._test_stack = None
+        else:
+            # pin the padded per-client stacks on device once — selection is
+            # a device gather, not a fresh host->device upload every round
+            self._train_stack = tuple(jnp.asarray(a) for a in
+                                      (data.x_train, data.y_train,
+                                       data.n_train))
+            self._test_stack = tuple(jnp.asarray(a) for a in
+                                     (data.x_test, data.y_test, data.n_test))
 
     # -- single-dispatch round executor ------------------------------------
     def _exec_spec(self) -> dict:
@@ -113,26 +147,32 @@ class FedAvgTrainer:
             fn = rounds_lib.make_round_executor(
                 self.model, epochs=cfg.local_epochs,
                 batch_size=cfg.batch_size, lr=cfg.lr, mu=cfg.mu,
-                max_samples=self.data.x_train.shape[1], **self._exec_spec())
+                max_samples=self._max_samples, **self._exec_spec())
             self._round_exec = parallel_lib.make_sharded_executor(
                 fn, self.mesh)
         return self._round_exec
 
     # -- helpers -----------------------------------------------------------
     def _select(self):
-        idx = self.rng.choice(self.data.n_clients,
-                              min(self.cfg.clients_per_round,
-                                  self.data.n_clients), replace=False)
+        if self.population is not None:
+            return self.population.next_cohort().idx
+        idx = self.select_rng.choice(self.n_clients,
+                                     min(self.cfg.clients_per_round,
+                                         self.n_clients), replace=False)
         if self.cfg.dropout_rate > 0.0:
             # stragglers drop out before completing the round (the server
             # aggregates whoever finished within the time budget, Alg. 1)
-            alive = self.rng.random(len(idx)) >= self.cfg.dropout_rate
+            alive = self.select_rng.random(len(idx)) >= self.cfg.dropout_rate
             if not alive.any():
-                alive[self.rng.integers(len(idx))] = True
+                alive[self.select_rng.integers(len(idx))] = True
             idx = idx[alive]
         return idx
 
     def _client_batch(self, idx):
+        if self.population is not None:
+            # the live cohort's prefetched device arrays (or a slice of
+            # them, e.g. the cold-start subset); store gather otherwise
+            return self.population.device_batch(idx)
         sel = jnp.asarray(np.asarray(idx, np.int32))
         x, y, n = self._train_stack
         return x[sel], y[sel], n[sel]
@@ -144,8 +184,26 @@ class FedAvgTrainer:
         deltas, finals = self.solver(params, x, y, n, keys)
         return deltas, finals, n
 
+    def _eval_correct(self, params, client_idx=None):
+        """Streamed (population-mode) eval: (correct, total) accumulated
+        over blocks of at most ``eval_batch`` clients — no full-population
+        device allocation."""
+        pop = self.population
+        idx = pop.eval_ids() if client_idx is None else np.asarray(client_idx)
+        if len(idx) == 0:
+            return 0, 0
+        correct = total = 0
+        for block, x, y, n in pop.eval_batches(idx):
+            c = self.eval_fn(params, x, y, n)
+            correct += int(np.sum(np.asarray(c)))
+            total += int(np.sum(np.asarray(n)))
+        return correct, total
+
     def evaluate(self, params=None, client_idx=None) -> float:
         params = self.params if params is None else params
+        if self.population is not None:
+            correct, total = self._eval_correct(params, client_idx)
+            return correct / max(total, 1)
         d = self.data
         xt, yt, nt = self._test_stack
         if client_idx is None:
@@ -173,7 +231,7 @@ class FedAvgTrainer:
             jnp.zeros(len(idx), jnp.int32), x, y, n, keys)
         self.params = out.global_params
         acc = self.evaluate()
-        m = RoundMetrics(t, acc, 0.0, float(out.discrepancy))
+        m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy))
         self.history.add(m)
         return m
 
@@ -182,14 +240,20 @@ class FedAvgTrainer:
             self.round(t)
         return self.history
 
+    def close(self):
+        """Stop the population prefetch thread (no-op in pinned mode)."""
+        if self.population is not None:
+            self.population.close()
+
 
 class FedProxTrainer(FedAvgTrainer):
     framework = "fedprox"
 
-    def __init__(self, model, data, cfg: FedConfig, mesh=None):
+    def __init__(self, model, data, cfg: FedConfig, mesh=None,
+                 population=None):
         if cfg.mu <= 0:
             cfg = dataclasses.replace(cfg, mu=0.01)
-        super().__init__(model, data, cfg, mesh=mesh)
+        super().__init__(model, data, cfg, mesh=mesh, population=population)
 
 
 class GroupedTrainer(FedAvgTrainer):
@@ -197,10 +261,16 @@ class GroupedTrainer(FedAvgTrainer):
     m group models kept as an m-stacked pytree, per-client membership
     bookkeeping, and group-wise weighted-accuracy evaluation."""
 
-    def __init__(self, model, data, cfg: FedConfig, mesh=None):
-        super().__init__(model, data, cfg, mesh=mesh)
+    def __init__(self, model, data, cfg: FedConfig, mesh=None,
+                 population=None):
+        super().__init__(model, data, cfg, mesh=mesh, population=population)
         self.m = cfg.n_groups
-        self.membership = np.full(data.n_clients, -1, np.int64)
+        if population is not None:
+            # membership IS the persistent state table's column, so the
+            # trainers' in-place writes survive across cohorts/restarts
+            self.membership = population.state.membership
+        else:
+            self.membership = np.full(self.n_clients, -1, np.int64)
 
     def group_param(self, j: int):
         """The j-th group's parameter pytree (view into the stacked state)."""
@@ -209,6 +279,18 @@ class GroupedTrainer(FedAvgTrainer):
     def evaluate_groups(self) -> float:
         """Weighted accuracy: each group model on the test data of all
         clients historically assigned to it (paper §5.1 metric)."""
+        if self.population is not None:
+            eval_ids = self.population.eval_ids()
+            mem = self.membership[eval_ids]
+            total_correct, total_n = 0, 0
+            for j in range(self.m):
+                members = eval_ids[mem == j]
+                if len(members) == 0:
+                    continue
+                c, tot = self._eval_correct(self.group_param(j), members)
+                total_correct += c
+                total_n += tot
+            return total_correct / max(total_n, 1)
         total_correct, total_n = 0, 0
         xt, yt, nt = self._test_stack
         for j in range(self.m):

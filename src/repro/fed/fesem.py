@@ -16,6 +16,12 @@ per-client flattened-model matrix ``local_flat`` is a persistent device
 array updated by an in-program scatter (``fesem_state_update``) — the seed
 implementation's host numpy matrix rebuilt through ``_flat()`` round-trips
 every round survives only as ``fed.rounds.serial_fesem_round``.
+
+In ``population=`` mode the (N, d_w) matrix stays host-resident in the
+``ClientStateTable`` (lazy rows); each round gathers only the cohort's
+(K, d_w) rows to device, runs the *same* compiled round with cohort-local
+ids, and scatters the updated rows back — dynamic assignment keeps working
+when the population no longer fits on device.
 """
 from __future__ import annotations
 
@@ -52,15 +58,24 @@ def fesem_state_update(state, membership, deltas, finals):
 class FeSEMTrainer(GroupedTrainer):
     framework = "fesem"
 
-    def __init__(self, model, data, cfg: FedConfig, mesh=None):
-        super().__init__(model, data, cfg, mesh=mesh)
+    def __init__(self, model, data, cfg: FedConfig, mesh=None,
+                 population=None):
+        super().__init__(model, data, cfg, mesh=mesh, population=population)
         keys = jax.random.split(jax.random.PRNGKey(cfg.seed + 29), self.m)
         self.group_params = rounds_lib.stack_trees(
             [model.init(k) for k in keys])
-        # local models last seen per client, initialized to center 0 —
-        # lives on device for the in-program E-step gather / M-step scatter
+        # local models last seen per client, initialized to center 0
         flat0 = flatten_updates(self.group_param(0))
-        self.local_flat = jnp.tile(flat0[None], (data.n_clients, 1))
+        if population is not None:
+            # population scale: the (N, d_w) matrix stays HOST-resident in
+            # the state table (lazy rows, default = init center 0); only
+            # the cohort's (K, d_w) rows are gathered to device per round
+            self.local_flat = None
+            population.state.init_local_flat(np.asarray(flat0))
+        else:
+            # pinned: lives on device for the in-program E-step gather /
+            # M-step scatter
+            self.local_flat = jnp.tile(flat0[None], (self.n_clients, 1))
 
     def _exec_spec(self) -> dict:
         return {"n_groups": self.m, "eta_g": 0.0,
@@ -74,13 +89,26 @@ class FeSEMTrainer(GroupedTrainer):
         x, y, n = self._client_batch(idx)
         self.key, sk = jax.random.split(self.key)
         keys = jax.random.split(sk, len(idx))
-        state = {"local_flat": self.local_flat,
-                 "idx": jnp.asarray(np.asarray(idx, np.int32))}
+        if self.population is not None:
+            # state-table gather: cohort rows with cohort-local ids — the
+            # executor program is byte-identical to the pinned one, the
+            # E-step gather/M-step scatter just act on (K, d_w) instead of
+            # the full (N, d_w)
+            rows = jnp.asarray(self.population.state.gather_local_flat(idx))
+            state = {"local_flat": rows,
+                     "idx": jnp.arange(len(idx), dtype=jnp.int32)}
+        else:
+            state = {"local_flat": self.local_flat,
+                     "idx": jnp.asarray(np.asarray(idx, np.int32))}
         out = self._round_executor()(self.group_params, state, x, y, n, keys)
         self.group_params = out.group_params
-        self.local_flat = out.assign_state["local_flat"]
+        if self.population is not None:
+            self.population.state.scatter_local_flat(
+                idx, np.asarray(out.assign_state["local_flat"]))
+        else:
+            self.local_flat = out.assign_state["local_flat"]
         self.membership[idx] = np.asarray(out.membership)
         acc = self.evaluate_groups()
-        m = RoundMetrics(t, acc, 0.0, float(out.discrepancy))
+        m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy))
         self.history.add(m)
         return m

@@ -41,8 +41,9 @@ def make_ifca_assign(model):
 class IFCATrainer(GroupedTrainer):
     framework = "ifca"
 
-    def __init__(self, model, data, cfg: FedConfig, mesh=None):
-        super().__init__(model, data, cfg, mesh=mesh)
+    def __init__(self, model, data, cfg: FedConfig, mesh=None,
+                 population=None):
+        super().__init__(model, data, cfg, mesh=mesh, population=population)
         keys = jax.random.split(jax.random.PRNGKey(cfg.seed + 17), self.m)
         # random initializations of cluster centers (IFCA §3)
         self.group_params = rounds_lib.stack_trees(
@@ -62,8 +63,10 @@ class IFCATrainer(GroupedTrainer):
         keys = jax.random.split(sk, len(idx))
         out = self._round_executor()(self.group_params, None, x, y, n, keys)
         self.group_params = out.group_params
+        # persists into the population state table when streaming (the
+        # trainer's membership array IS the table's column)
         self.membership[idx] = np.asarray(out.membership)
         acc = self.evaluate_groups()
-        m = RoundMetrics(t, acc, 0.0, float(out.discrepancy))
+        m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy))
         self.history.add(m)
         return m

@@ -54,11 +54,17 @@ def default_data_mesh():
 def shard_client_axis(mesh, tree):
     """device_put every array leaf with its leading (client) axis sharded
     over the mesh "data" axes when divisible, replicated otherwise.
+    ``mesh=None`` degrades to a plain asynchronous ``jax.device_put`` — the
+    unified H2D entry the population prefetcher uses, so streamed cohorts
+    land pre-placed for the executor on one device and on a mesh alike.
 
     Works on arbitrary pytrees, so the dynamic-assignment state (e.g.
     FeSEM's {"local_flat", "idx"}) shards leaf-by-leaf: local_flat by rows
     over all clients, idx over the selected-client axis.
     """
+    if mesh is None:
+        return jax.tree_util.tree_map(
+            lambda l: jax.device_put(jnp.asarray(l)), tree)
     total = 1
     for a in mesh.axis_names:
         total *= mesh.shape[a]

@@ -1,0 +1,357 @@
+"""Population engine: streamed round cohorts over a host-resident store.
+
+The pinned trainers upload the whole padded population at init; this module
+is the large-N replacement. A ``Population`` bundles
+
+  * a ``ClientStore`` (``fed.store``) holding the population host-resident,
+  * a ``Scheduler`` with pluggable cohort samplers — uniform (bit-identical
+    to the pinned trainers' selection under the same seed), size-weighted,
+    diurnal availability traces, scripted replay — plus a newcomer *arrival
+    process* that activates previously unseen clients every round, so
+    FedGroup's eq.-9 client cold start runs continuously instead of once,
+  * a ``ClientStateTable`` (membership / cold flags / FeSEM local_flat rows
+    / cached pre-training directions) gathered and scattered per cohort,
+  * a double-buffered *prefetcher*: a producer thread selects round t+1's
+    cohort, gathers its padded arrays from the store, and starts the H2D
+    transfer (``jax.device_put`` is asynchronous) while the device is still
+    executing round t's compiled executor — the transfer hides behind
+    compute instead of serializing with it.
+
+The trainers' ``population=`` mode consumes this through three calls:
+``next_cohort()`` (the scheduled, prefetched round batch),
+``device_batch(idx)`` (ad-hoc gathers, e.g. cold-start pre-training — a
+subset of the live cohort is sliced on device for free), and
+``eval_batches(params-independent test blocks)``. The compiled round
+program (``fed.rounds.make_round_executor`` / ``fed.parallel
+.make_sharded_executor``) is exactly the pinned path's — only the feeding
+changes.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.fed import parallel as parallel_lib
+from repro.fed.store import SELECT_STREAM, ClientStateTable, ClientStore
+
+
+@dataclass
+class PopulationConfig:
+    """Knobs of the streamed population (sampling, availability, arrivals,
+    prefetch, eval). ``seed=None`` inherits the trainer's ``cfg.seed`` so a
+    same-seed uniform/always-available population reproduces the pinned
+    trainers' selection stream exactly (the equivalence tests rely on it).
+    """
+    sampler: str = "uniform"        # uniform | size | scripted
+    script: list | None = None      # scripted: per-round index arrays
+    availability: str = "always"    # always | diurnal
+    period: int = 24                # diurnal: rounds per simulated day
+    duty: float = 0.5               # diurnal: awake fraction of the day
+    initial_active: int | None = None   # None = whole population active
+    arrival_rate: float = 0.0       # Poisson mean newcomers per round
+    newcomers_join: bool = True     # arrivals are forced into their round's cohort
+    prefetch: int = 2               # cohorts in flight (0 = synchronous)
+    # eval on a fixed subsample; None = the whole population, which matches
+    # pinned-path semantics exactly but costs O(N) per evaluate() — at
+    # N >= 10^4 set this (or rely on the grouped trainers' assigned-members
+    # eval, which only touches clients that have ever been scheduled)
+    eval_clients: int | None = None
+    eval_batch: int = 512           # clients per streamed eval block
+    seed: int | None = None
+
+
+@dataclass
+class Cohort:
+    """One scheduled round batch: ids + device-resident padded arrays."""
+    t: int
+    idx: np.ndarray                 # (K,) client ids
+    x: object                       # (K, max_n, ...) on device
+    y: object
+    n: object
+    n_new: int = 0                  # newcomers activated this round
+    _pos: dict = field(default_factory=dict, repr=False)
+
+    def positions(self, ids) -> np.ndarray | None:
+        """Cohort-local positions of ``ids`` (None if any id is absent)."""
+        if not self._pos:
+            self._pos = {int(i): p for p, i in enumerate(self.idx)}
+        try:
+            return np.asarray([self._pos[int(i)] for i in ids], np.int32)
+        except KeyError:
+            return None
+
+
+class Scheduler:
+    """Availability-aware cohort selection + the newcomer arrival process.
+
+    The active set starts as ``initial_active`` uniformly random clients
+    (or everyone); each round ``select(t, k)`` first activates
+    ``Poisson(arrival_rate)`` arrivals (in a fixed random arrival order),
+    then samples the cohort from the *available* actives: everyone under
+    ``availability='always'``, or the clients whose diurnal phase puts them
+    awake at round t (each client keeps a fixed phase; a fraction ``duty``
+    of the period is awake — the classic cross-device availability trace).
+    Newcomers join their arrival round's cohort (they "report in", which
+    is what feeds the eq.-9 cold-start path every round); the rest of the
+    cohort fills uniformly or size-weighted without replacement.
+    """
+
+    def __init__(self, store: ClientStore, cfg: PopulationConfig, seed: int):
+        self.store, self.cfg = store, cfg
+        # same derived stream as the pinned trainers' select_rng
+        self.rng = np.random.default_rng(
+            [cfg.seed if cfg.seed is not None else seed, SELECT_STREAM])
+        N = store.n_clients
+        if cfg.sampler not in ("uniform", "size", "scripted"):
+            raise ValueError(f"unknown sampler {cfg.sampler!r}")
+        if cfg.sampler == "scripted" and not cfg.script:
+            raise ValueError("scripted sampler needs cfg.script")
+        self.active = np.ones(N, bool)
+        self._arrival_queue = np.empty(0, np.int64)
+        if cfg.initial_active is not None and cfg.initial_active < N:
+            perm = self.rng.permutation(N)
+            self.active[:] = False
+            self.active[perm[:cfg.initial_active]] = True
+            self._arrival_queue = perm[cfg.initial_active:]
+        self.phase = (self.rng.integers(0, cfg.period, N)
+                      if cfg.availability == "diurnal" else None)
+        self.last_arrivals = np.empty(0, np.int64)
+        self.rounds_scheduled = 0
+
+    # -- availability ------------------------------------------------------
+    def available_mask(self, t: int) -> np.ndarray:
+        avail = self.active.copy()
+        if self.phase is not None:
+            awake = ((t + self.phase) % self.cfg.period) < \
+                self.cfg.duty * self.cfg.period
+            avail &= awake
+        return avail
+
+    def active_ids(self) -> np.ndarray:
+        return np.where(self.active)[0]
+
+    # -- arrivals ----------------------------------------------------------
+    def _arrive(self) -> np.ndarray:
+        cfg = self.cfg
+        if cfg.arrival_rate <= 0 or len(self._arrival_queue) == 0:
+            self.last_arrivals = np.empty(0, np.int64)
+            return self.last_arrivals
+        k = min(int(self.rng.poisson(cfg.arrival_rate)),
+                len(self._arrival_queue))
+        new, self._arrival_queue = (self._arrival_queue[:k],
+                                    self._arrival_queue[k:])
+        self.active[new] = True
+        self.last_arrivals = new
+        return new
+
+    # -- selection ---------------------------------------------------------
+    def select(self, t: int, k: int, dropout_rate: float = 0.0):
+        """-> (cohort ids (K,), n_new). Sequential in t (the prefetcher is
+        the only caller); all randomness comes from the scheduler rng."""
+        cfg = self.cfg
+        if cfg.sampler == "scripted":
+            idx = np.asarray(cfg.script[t % len(cfg.script)], np.int64)
+            self.rounds_scheduled += 1
+            return idx, 0
+        new = self._arrive()
+        avail = self.available_mask(t)
+        pool = np.where(avail)[0]
+        if cfg.sampler == "uniform" and len(new) == 0 and \
+                len(pool) == self.store.n_clients:
+            # bit-compatible with the pinned trainers' selection: same
+            # rng.choice(n, k) call when the whole population is available
+            idx = self.rng.choice(self.store.n_clients,
+                                  min(k, self.store.n_clients),
+                                  replace=False)
+        else:
+            forced = new[:k] if cfg.newcomers_join else np.empty(0, np.int64)
+            rest = pool[~np.isin(pool, forced)]
+            want = min(k, len(rest) + len(forced)) - len(forced)
+            if want > 0 and len(rest) > 0:
+                if cfg.sampler == "size":
+                    w = self.store.n_train[rest].astype(np.float64)
+                    p = w / max(w.sum(), 1e-12)
+                    fill = self.rng.choice(rest, want, replace=False, p=p)
+                else:
+                    fill = self.rng.choice(rest, want, replace=False)
+            else:
+                fill = np.empty(0, np.int64)
+            idx = np.concatenate([forced, fill])
+        if len(idx) == 0:
+            # every active client is asleep this round — the round executor
+            # needs >=1 client (the pinned dropout path keeps the same
+            # floor), so wake one active client uniformly
+            actives = np.where(self.active)[0]
+            if len(actives) == 0:
+                raise RuntimeError(
+                    "population has no active clients to schedule "
+                    "(initial_active=0 and no arrivals yet)")
+            idx = self.rng.choice(actives, 1)
+        if dropout_rate > 0.0 and len(idx):
+            alive = self.rng.random(len(idx)) >= dropout_rate
+            if not alive.any():
+                alive[self.rng.integers(len(idx))] = True
+            idx = idx[alive]
+        self.rounds_scheduled += 1
+        return idx, len(new)
+
+
+class Population:
+    """Store + scheduler + state table + prefetcher, bound to one trainer.
+
+    Construct with a store and a ``PopulationConfig``, pass as the
+    trainers' ``population=``; the trainer calls ``attach`` with its
+    ``FedConfig`` (cohort size, dropout, seed default) and mesh. The
+    prefetch thread starts on the first ``next_cohort``.
+    """
+
+    def __init__(self, store: ClientStore, cfg: PopulationConfig | None = None):
+        self.store = store
+        self.cfg = cfg or PopulationConfig()
+        self.state = ClientStateTable(store.n_clients)
+        self.scheduler = None
+        self.mesh = None
+        self._k = None
+        self._dropout = 0.0
+        self._queue = None
+        self._thread = None
+        self._stop = threading.Event()
+        self._producer_error = None
+        self._warned_eval_scale = False
+        self._cohort = None            # live (most recently consumed) cohort
+        self._eval_ids = None
+        self.rounds_streamed = 0
+
+    # -- trainer binding ---------------------------------------------------
+    def attach(self, fed_cfg, mesh=None):
+        if self.scheduler is not None:
+            raise RuntimeError("Population is already attached to a trainer")
+        self.scheduler = Scheduler(self.store, self.cfg, seed=fed_cfg.seed)
+        self.mesh = mesh
+        self._k = fed_cfg.clients_per_round
+        self._dropout = fed_cfg.dropout_rate
+        if self.cfg.eval_clients is not None and \
+                self.cfg.eval_clients < self.store.n_clients:
+            eval_rng = np.random.default_rng(
+                (self.cfg.seed if self.cfg.seed is not None
+                 else fed_cfg.seed) + 0x5EED)
+            self._eval_ids = np.sort(eval_rng.choice(
+                self.store.n_clients, self.cfg.eval_clients, replace=False))
+        else:
+            self._eval_ids = np.arange(self.store.n_clients)
+
+    # -- device placement --------------------------------------------------
+    def _put(self, arrays):
+        """Start the H2D transfer (sharded over the trainer mesh when one
+        is present; plain async device_put otherwise)."""
+        return parallel_lib.shard_client_axis(self.mesh, arrays)
+
+    def device_batch(self, idx):
+        """(x, y, n) on device for an arbitrary id set. Ids inside the live
+        cohort are sliced from its already-transferred arrays (the cold-
+        start subset case); anything else is a fresh store gather."""
+        idx = np.asarray(idx)
+        c = self._cohort
+        if c is not None:
+            pos = c.positions(idx)
+            if pos is not None:
+                if len(pos) == len(c.idx) and np.all(pos == np.arange(len(pos))):
+                    return c.x, c.y, c.n
+                return c.x[pos], c.y[pos], c.n[pos]
+        return self._put(self.store.gather_train(idx))
+
+    # -- streamed cohorts --------------------------------------------------
+    def _produce(self):
+        try:
+            for t in itertools.count():
+                if self._stop.is_set():
+                    return
+                idx, n_new = self.scheduler.select(t, self._k, self._dropout)
+                x, y, n = self._put(self.store.gather_train(idx))
+                cohort = Cohort(t, np.asarray(idx), x, y, n, n_new)
+                while not self._stop.is_set():
+                    try:
+                        self._queue.put(cohort, timeout=0.2)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:  # noqa: BLE001 — surfaced by next_cohort
+            self._producer_error = e
+            while not self._stop.is_set():
+                try:                    # wake a blocked consumer
+                    self._queue.put(None, timeout=0.2)
+                    break
+                except queue.Full:
+                    continue
+
+    def next_cohort(self) -> Cohort:
+        """The next scheduled round batch, already on (or in flight to) the
+        device. With ``prefetch=0`` selection+gather run synchronously —
+        the no-overlap baseline the population bench compares against."""
+        if self.scheduler is None:
+            raise RuntimeError("attach() a trainer first")
+        if self._stop.is_set():
+            raise RuntimeError("population was close()d — the cohort "
+                               "stream cannot be resumed")
+        if self.cfg.prefetch <= 0:
+            t = self.rounds_streamed
+            idx, n_new = self.scheduler.select(t, self._k, self._dropout)
+            cohort = Cohort(t, np.asarray(idx),
+                            *self._put(self.store.gather_train(idx)), n_new)
+        else:
+            if self._thread is None:
+                self._queue = queue.Queue(maxsize=self.cfg.prefetch)
+                self._thread = threading.Thread(
+                    target=self._produce, name="population-prefetch",
+                    daemon=True)
+                self._thread.start()
+            cohort = self._queue.get()
+            if cohort is None:          # producer died — re-raise its error
+                raise RuntimeError(
+                    "population prefetch thread failed"
+                ) from self._producer_error
+        self.rounds_streamed += 1
+        self._cohort = cohort
+        return cohort
+
+    def close(self):
+        self._stop.set()
+        if self._thread is not None:
+            # drain so a producer blocked on put() can observe the stop flag
+            try:
+                while True:
+                    self._queue.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=2.0)
+            self._thread = None
+
+    # -- streamed evaluation ----------------------------------------------
+    def eval_ids(self) -> np.ndarray:
+        return self._eval_ids if self._eval_ids is not None \
+            else np.arange(self.store.n_clients)
+
+    def eval_batches(self, idx=None):
+        """Yield device-resident (x_test, y_test, n_test) blocks of at most
+        ``eval_batch`` clients — full-population eval without a full-
+        population device allocation."""
+        idx = self.eval_ids() if idx is None else np.asarray(idx)
+        if len(idx) > 20_000 and not self._warned_eval_scale:
+            self._warned_eval_scale = True
+            import warnings
+            warnings.warn(
+                f"streaming evaluation over {len(idx)} clients every "
+                f"round is O(N) host gather — set "
+                f"PopulationConfig.eval_clients to subsample (grouped "
+                f"trainers' eval only touches assigned members)",
+                stacklevel=2)
+        B = max(int(self.cfg.eval_batch), 1)
+        for lo in range(0, len(idx), B):
+            block = idx[lo:lo + B]
+            x, y, n = self._put(self.store.gather_test(block))
+            yield block, x, y, n

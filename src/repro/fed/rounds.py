@@ -53,6 +53,8 @@ class RoundOutput(NamedTuple):
     discrepancy: object       # scalar: mean_i ||w_i^final − w̃_{g(i)}||
     membership: object        # (K,) int32 group id used this round
     assign_state: object      # updated assignment-stage state (None if static)
+    mean_loss: object = 0.0   # scalar: n_i-weighted mean local train loss
+                              # of the clients' final local models
 
 
 def stack_trees(trees):
@@ -93,6 +95,7 @@ def make_round_executor(model, *, epochs: int, batch_size: int, lr: float,
     solve = client_lib.make_local_solver(
         model, epochs=epochs, batch_size=batch_size, lr=lr, mu=mu,
         max_samples=max_samples)
+    loss_one = client_lib.client_mean_loss(model)
 
     def round_fn(group_params, membership, X, Y, n, keys) -> RoundOutput:
         state = None
@@ -123,6 +126,11 @@ def make_round_executor(model, *, epochs: int, batch_size: int, lr: float,
                 (-1,) + (1,) * (gp.ndim - 1)) * gd,
             group_params, agg_delta)
 
+        # mean local training loss of the final local models (what History
+        # reports as mean_loss — one extra forward pass, n_i-weighted)
+        per_client_loss = jax.vmap(loss_one)(finals, X, Y, n)
+        mean_loss = jnp.sum(per_client_loss * w) / jnp.maximum(jnp.sum(w), 1e-9)
+
         # eq. 4 discrepancy: each client vs its group's intra-aggregated model
         tilde_mine = jax.tree_util.tree_map(lambda t: t[membership], tilde)
         K = membership.shape[0]
@@ -151,7 +159,8 @@ def make_round_executor(model, *, epochs: int, batch_size: int, lr: float,
         if assign_fn is not None and state_update_fn is not None:
             state = state_update_fn(state, membership, deltas, finals)
         return RoundOutput(new_groups, global_params, agg_delta,
-                           group_delta_flat, discrepancy, membership, state)
+                           group_delta_flat, discrepancy, membership, state,
+                           mean_loss)
 
     return round_fn
 

@@ -1,0 +1,383 @@
+"""Population engine: streamed cohorts vs the pinned path, store/state-table
+semantics, scheduler availability/arrivals, and the mean_loss surfacing.
+
+The load-bearing property: a population run through the ClientStore cohort
+path (host-resident store + prefetched device cohorts + per-cohort state
+gather/scatter) must reproduce the pinned path bit-for-bit — same params,
+same History metrics — for the static (FedAvg/FedGroup) and dynamic
+(IFCA/FeSEM) frameworks alike, since both feed the identical compiled
+round executor.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.data.generators import mnist_like, virtual_mnist_like, \
+    virtual_synthetic
+from repro.fed.engine import FedAvgTrainer, FedConfig
+from repro.fed.population import Cohort, Population, PopulationConfig, \
+    Scheduler
+from repro.fed.store import ArrayClientStore, ClientStateTable
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    return mnist_like(seed=0, n_clients=40, classes_per_client=2,
+                      total_train=2000, dim=16)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    from repro.models.paper_models import mclr
+    return mclr(16, 10)
+
+
+def _cfg(**kw):
+    base = dict(n_rounds=3, clients_per_round=8, local_epochs=2,
+                batch_size=5, lr=0.05, n_groups=3, pretrain_scale=4, seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _assert_tree_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _run_both(cls, model, data, cfg, rounds=3, pop_kw=None):
+    pinned = cls(model, data, cfg)
+    h_pin = pinned.run(rounds)
+    pop = Population(ArrayClientStore(data),
+                     PopulationConfig(**(pop_kw or {})))
+    streamed = cls(model, None, cfg, population=pop)
+    h_st = streamed.run(rounds)
+    streamed.close()
+    return pinned, h_pin, streamed, h_st
+
+
+class TestStore:
+    def test_array_store_gather_matches_data(self, small_data):
+        store = ArrayClientStore(small_data)
+        idx = np.array([3, 17, 0])
+        x, y, n = store.gather_train(idx)
+        np.testing.assert_array_equal(x, small_data.x_train[idx])
+        np.testing.assert_array_equal(y, small_data.y_train[idx])
+        np.testing.assert_array_equal(n, small_data.n_train[idx])
+        xe, ye, ne = store.gather_test(idx)
+        np.testing.assert_array_equal(xe, small_data.x_test[idx])
+        np.testing.assert_array_equal(ne, small_data.n_test[idx])
+
+    def test_virtual_store_is_lazy_and_deterministic(self):
+        store = virtual_synthetic(n_clients=100_000, mean_size=20,
+                                  max_size=40)
+        assert store.generated_clients == 0
+        idx = np.array([1, 99_999, 54_321])
+        x1, y1, n1 = store.gather_train(idx)
+        assert store.generated_clients == 3          # only the cohort
+        # access order / repetition does not change a client's data
+        x2, y2, n2 = store.gather_train(idx[::-1])
+        np.testing.assert_array_equal(x1, x2[::-1])
+        np.testing.assert_array_equal(y1, y2[::-1])
+        assert x1.shape == (3, store.max_train, 60)
+        assert (n1 <= store.max_train).all()
+
+    def test_virtual_store_memmap_shards(self, tmp_path):
+        mem = virtual_mnist_like(seed=3, n_clients=300, dim=8,
+                                 mean_size=15, max_size=30,
+                                 memmap_dir=str(tmp_path), shard_clients=16)
+        ram = virtual_mnist_like(seed=3, n_clients=300, dim=8,
+                                 mean_size=15, max_size=30)
+        idx = np.array([0, 17, 255, 18])
+        xtrain_mem = None
+        for split in ("gather_train", "gather_test"):
+            xm, ym, nm = getattr(mem, split)(idx)
+            xr, yr, nr = getattr(ram, split)(idx)
+            np.testing.assert_array_equal(xm, xr)
+            np.testing.assert_array_equal(ym, yr)
+            np.testing.assert_array_equal(nm, nr)
+            if split == "gather_train":
+                xtrain_mem = xm
+        assert list(tmp_path.glob("xt_*.npy"))       # shards hit disk
+        # a fresh store over the same dir reads shards without regenerating
+        reread = virtual_mnist_like(seed=3, n_clients=300, dim=8,
+                                    mean_size=15, max_size=30,
+                                    memmap_dir=str(tmp_path),
+                                    shard_clients=16)
+        xm2, _, _ = reread.gather_train(idx)
+        np.testing.assert_array_equal(xm2, xtrain_mem)
+        assert reread.generated_clients == 0
+        # a shard without its completion marker (killed mid-fill) is
+        # regenerated instead of served as zero-filled rows
+        marker = sorted(tmp_path.glob("done_*"))[0]
+        marker.unlink()
+        again = virtual_mnist_like(seed=3, n_clients=300, dim=8,
+                                   mean_size=15, max_size=30,
+                                   memmap_dir=str(tmp_path),
+                                   shard_clients=16)
+        xa, _, _ = again.gather_train(idx)
+        np.testing.assert_array_equal(xa, xtrain_mem)
+        assert again.generated_clients > 0
+
+    def test_materialize_round_trips(self):
+        store = virtual_synthetic(n_clients=25, mean_size=15, max_size=30)
+        data = store.materialize()
+        back = ArrayClientStore(data)
+        idx = np.arange(25)
+        for a, b in zip(store.gather_train(idx), back.gather_train(idx)):
+            np.testing.assert_array_equal(a, b)
+
+
+class TestStateTable:
+    def test_membership_and_cold_flags(self):
+        st = ClientStateTable(10)
+        assert st.cold_mask().all()
+        st.membership[[2, 5]] = 1
+        np.testing.assert_array_equal(st.cold_ids(np.array([1, 2, 3, 5])),
+                                      [1, 3])
+
+    def test_lazy_local_flat_rows(self):
+        st = ClientStateTable(1000)
+        st.init_local_flat(np.full(4, 7.0, np.float32))
+        rows = st.gather_local_flat(np.array([0, 999]))
+        np.testing.assert_array_equal(rows, np.full((2, 4), 7.0))
+        st.scatter_local_flat(np.array([999]), np.ones((1, 4)))
+        rows = st.gather_local_flat(np.array([0, 999]))
+        np.testing.assert_array_equal(rows[0], np.full(4, 7.0))
+        np.testing.assert_array_equal(rows[1], np.ones(4))
+        assert st.touched_rows() == 1                # memory ∝ touched
+
+    def test_pretrain_dir_cache(self):
+        st = ClientStateTable(50)
+        assert st.get_pretrain_dir(np.array([3])) is None
+        st.set_pretrain_dir(np.array([3, 4]), np.ones((2, 6)))
+        np.testing.assert_array_equal(
+            st.get_pretrain_dir(np.array([4]))[0], np.ones(6))
+
+
+class TestScheduler:
+    def test_uniform_matches_pinned_selection(self, small_data):
+        """Same-seed scheduler replays the pinned trainers' select stream
+        (the derived [seed, SELECT_STREAM] rng, decorrelated from the
+        cold-start stream)."""
+        from repro.fed.store import SELECT_STREAM
+        store = ArrayClientStore(small_data)
+        sched = Scheduler(store, PopulationConfig(), seed=0)
+        rng = np.random.default_rng([0, SELECT_STREAM])
+        for t in range(4):
+            idx, _ = sched.select(t, 8)
+            np.testing.assert_array_equal(
+                idx, rng.choice(40, 8, replace=False))
+        # ... and it is NOT the cold-start stream (the old correlated bug)
+        assert not np.array_equal(
+            Scheduler(store, PopulationConfig(), seed=0).select(0, 8)[0],
+            np.random.default_rng(0).choice(40, 8, replace=False))
+
+    def test_diurnal_availability_restricts_cohort(self, small_data):
+        store = ArrayClientStore(small_data)
+        cfg = PopulationConfig(availability="diurnal", period=8, duty=0.25)
+        sched = Scheduler(store, cfg, seed=0)
+        for t in range(8):
+            avail = sched.available_mask(t)
+            assert 0 < avail.sum() < store.n_clients
+            idx, _ = sched.select(t, 50)
+            assert avail[idx].all()                  # only awake clients
+        # every client is awake at some hour of the day
+        union = np.zeros(store.n_clients, bool)
+        for t in range(8):
+            union |= sched.available_mask(t)
+        assert union.all()
+
+    def test_arrival_process_activates_newcomers(self, small_data):
+        store = ArrayClientStore(small_data)
+        cfg = PopulationConfig(initial_active=10, arrival_rate=5.0, seed=1)
+        sched = Scheduler(store, cfg, seed=1)
+        assert sched.active.sum() == 10
+        seen_new = 0
+        for t in range(12):
+            idx, n_new = sched.select(t, 6)
+            seen_new += n_new
+            # newcomers join their arrival round's cohort
+            assert np.isin(sched.last_arrivals[:6], idx).all()
+        assert seen_new > 0
+        assert sched.active.sum() == 10 + seen_new
+
+    def test_size_weighted_sampler_prefers_large_clients(self, small_data):
+        store = ArrayClientStore(small_data)
+        sched = Scheduler(store, PopulationConfig(sampler="size",
+                                                  initial_active=40),
+                          seed=0)
+        counts = np.zeros(store.n_clients)
+        for t in range(150):
+            idx, _ = sched.select(t, 5)
+            counts[idx] += 1
+        big = np.argsort(store.n_train)[-10:]
+        small = np.argsort(store.n_train)[:10]
+        assert counts[big].mean() > counts[small].mean()
+
+    def test_all_asleep_round_still_schedules_one_client(self, small_data):
+        """A diurnal trough (every active client asleep) must not produce
+        an empty cohort — the round executor needs >= 1 client."""
+        store = ArrayClientStore(small_data)
+        cfg = PopulationConfig(availability="diurnal", period=10, duty=0.1,
+                               initial_active=2, seed=5)
+        sched = Scheduler(store, cfg, seed=5)
+        for t in range(10):
+            idx, _ = sched.select(t, 6)
+            assert len(idx) >= 1
+            assert sched.active[idx].all()
+
+    def test_no_active_clients_is_an_error(self, small_data):
+        sched = Scheduler(ArrayClientStore(small_data),
+                          PopulationConfig(initial_active=0), seed=0)
+        sched.active[:] = False
+        with pytest.raises(RuntimeError, match="no active clients"):
+            sched.select(0, 5)
+
+    def test_scripted_replay(self, small_data):
+        store = ArrayClientStore(small_data)
+        script = [np.array([1, 2, 3]), np.array([4, 5, 6])]
+        sched = Scheduler(store, PopulationConfig(sampler="scripted",
+                                                  script=script), seed=0)
+        np.testing.assert_array_equal(sched.select(0, 3)[0], [1, 2, 3])
+        np.testing.assert_array_equal(sched.select(1, 3)[0], [4, 5, 6])
+
+
+class TestStreamedPinnedEquivalence:
+    def test_fedavg(self, small_model, small_data):
+        pinned, h_pin, streamed, h_st = _run_both(
+            FedAvgTrainer, small_model, small_data, _cfg())
+        assert h_pin.rounds == h_st.rounds
+        _assert_tree_equal(pinned.params, streamed.params)
+
+    def test_fedavg_prefetch_disabled(self, small_model, small_data):
+        _, h_pin, _, h_st = _run_both(
+            FedAvgTrainer, small_model, small_data, _cfg(), rounds=2,
+            pop_kw={"prefetch": 0})
+        assert h_pin.rounds == h_st.rounds
+
+    def test_fedgroup(self, small_model, small_data):
+        from repro.core.fedgroup import FedGroupTrainer
+        pinned, h_pin, streamed, h_st = _run_both(
+            FedGroupTrainer, small_model, small_data, _cfg())
+        assert h_pin.rounds == h_st.rounds
+        _assert_tree_equal(pinned.group_params, streamed.group_params)
+        np.testing.assert_array_equal(pinned.membership, streamed.membership)
+        # cold-started clients left their eq.-9 direction in the table
+        assigned = np.where(streamed.membership >= 0)[0]
+        dirs = streamed.population.state.get_pretrain_dir(assigned[:1])
+        assert dirs is not None and np.isfinite(dirs).all()
+
+    def test_ifca(self, small_model, small_data):
+        from repro.fed.ifca import IFCATrainer
+        pinned, h_pin, streamed, h_st = _run_both(
+            IFCATrainer, small_model, small_data, _cfg())
+        assert h_pin.rounds == h_st.rounds
+        _assert_tree_equal(pinned.group_params, streamed.group_params)
+        np.testing.assert_array_equal(pinned.membership, streamed.membership)
+
+    def test_fesem_state_table_gather_scatter(self, small_model, small_data):
+        from repro.fed.fesem import FeSEMTrainer
+        pinned, h_pin, streamed, h_st = _run_both(
+            FeSEMTrainer, small_model, small_data, _cfg())
+        assert h_pin.rounds == h_st.rounds
+        _assert_tree_equal(pinned.group_params, streamed.group_params)
+        np.testing.assert_array_equal(pinned.membership, streamed.membership)
+        # the host state table holds exactly the touched clients' rows, and
+        # they equal the pinned device matrix's rows
+        touched = np.where(streamed.membership >= 0)[0]
+        rows = streamed.population.state.gather_local_flat(touched)
+        np.testing.assert_array_equal(
+            rows, np.asarray(pinned.local_flat)[touched])
+
+    def test_zero_newcomer_round(self, small_model, small_data):
+        """A round whose cohort holds no cold clients exercises the
+        cold-start no-op path (len(cold)==0 -> early return)."""
+        from repro.core.fedgroup import FedGroupTrainer
+        cfg = _cfg(pretrain_scale=20)       # 20*3 >= 40: pre-train everyone
+        pop = Population(ArrayClientStore(small_data), PopulationConfig())
+        tr = FedGroupTrainer(small_model, None, cfg, population=pop)
+        m = tr.round(0)
+        assert tr.last_cold == 0
+        assert (tr.membership >= 0).all()
+        assert np.isfinite(m.weighted_acc)
+        tr.close()
+
+    def test_arrival_driven_cold_start(self, small_model, small_data):
+        """Newcomers arriving mid-training are routed through eq. 9 the
+        round they first appear — cold start runs every round, not once."""
+        from repro.core.fedgroup import FedGroupTrainer
+        pop = Population(ArrayClientStore(small_data),
+                         PopulationConfig(initial_active=15,
+                                          arrival_rate=4.0, seed=2))
+        tr = FedGroupTrainer(small_model, None, _cfg(seed=2), population=pop)
+        cold_counts = []
+        for t in range(4):
+            tr.round(t)
+            cold_counts.append(tr.last_cold)
+        tr.close()
+        assert sum(cold_counts[1:]) > 0              # later-round cold starts
+        arrived = pop.scheduler.active_ids()
+        assert (tr.membership[~np.isin(np.arange(40), arrived)] < 0).all()
+
+    def test_streamed_eval_matches_pinned(self, small_model, small_data):
+        pinned = FedAvgTrainer(small_model, small_data, _cfg())
+        pop = Population(ArrayClientStore(small_data),
+                         PopulationConfig(eval_batch=7))
+        streamed = FedAvgTrainer(small_model, None, _cfg(), population=pop)
+        assert streamed.evaluate() == pinned.evaluate()
+        sub = np.array([1, 5, 9])
+        assert streamed.evaluate(client_idx=sub) == \
+            pinned.evaluate(client_idx=sub)
+        streamed.close()
+
+
+class TestPopulationPlumbing:
+    def test_cohort_subset_is_sliced_not_regathered(self, small_data):
+        store = ArrayClientStore(small_data)
+        pop = Population(store, PopulationConfig(prefetch=0))
+        pop.attach(_cfg())
+        c = pop.next_cohort()
+        x, y, n = pop.device_batch(c.idx[[2, 0]])
+        np.testing.assert_array_equal(np.asarray(x),
+                                      np.asarray(c.x)[[2, 0]])
+        np.testing.assert_array_equal(np.asarray(n),
+                                      np.asarray(c.n)[[2, 0]])
+
+    def test_cohort_positions(self):
+        c = Cohort(0, np.array([7, 3, 11]), None, None, None)
+        np.testing.assert_array_equal(c.positions([11, 7]), [2, 0])
+        assert c.positions([5]) is None
+
+    def test_population_single_attach(self, small_model, small_data):
+        pop = Population(ArrayClientStore(small_data), PopulationConfig())
+        tr = FedAvgTrainer(small_model, None, _cfg(), population=pop)
+        with pytest.raises(RuntimeError):
+            FedAvgTrainer(small_model, None, _cfg(), population=pop)
+        tr.close()
+
+    def test_producer_failure_raises_instead_of_hanging(self, small_data):
+        """A crash in the prefetch thread surfaces on next_cohort()."""
+        store = ArrayClientStore(small_data)
+
+        def boom(split, idx):
+            raise OSError("disk gone")
+
+        store._gather = boom
+        pop = Population(store, PopulationConfig(prefetch=1))
+        pop.attach(_cfg())
+        with pytest.raises(RuntimeError, match="prefetch thread failed"):
+            pop.next_cohort()
+        pop.close()
+        # and a closed population refuses new cohorts instead of hanging
+        with pytest.raises(RuntimeError, match="close"):
+            pop.next_cohort()
+
+    def test_mean_loss_surfaced(self, small_model, small_data):
+        """History reports the executor's actual weighted local train loss
+        (satellite: RoundMetrics.mean_loss was hard-coded 0.0)."""
+        tr = FedAvgTrainer(small_model, small_data, _cfg())
+        m0 = tr.round(0)
+        m1 = tr.round(1)
+        assert m0.mean_loss > 0.0 and np.isfinite(m0.mean_loss)
+        assert m1.mean_loss != m0.mean_loss

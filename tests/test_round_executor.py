@@ -93,6 +93,26 @@ class TestSingleDispatchEquivalence:
         np.testing.assert_allclose(np.asarray(out.group_delta_flat),
                                    np.asarray(ref_delta), atol=1e-5)
 
+    def test_mean_loss_is_weighted_final_loss(self):
+        """RoundOutput.mean_loss == n_i-weighted mean of each client's
+        final-model train loss (recomputed out-of-program)."""
+        model, gp_list, membership, X, Y, n, keys = _setup()
+        out, _ = _run_both(model, gp_list, membership, X, Y, n, keys)
+        solver = client_lib.make_batch_solver(
+            model, epochs=2, batch_size=5, lr=0.05, mu=0.0,
+            max_samples=X.shape[1])
+        my = [gp_list[g] for g in membership]
+        finals = []
+        for i in range(X.shape[0]):
+            _, f = solver(my[i], X[i:i+1], Y[i:i+1], n[i:i+1], keys[i:i+1])
+            finals.append(jax.tree_util.tree_map(lambda l: l[0], f))
+        loss_one = client_lib.client_mean_loss(model)
+        losses = np.array([float(loss_one(f, X[i], Y[i], n[i]))
+                           for i, f in enumerate(finals)])
+        w = np.asarray(n, np.float64)
+        expect = float((losses * w).sum() / w.sum())
+        assert float(out.mean_loss) == pytest.approx(expect, rel=1e-4)
+
     def test_single_group_is_fedavg(self):
         """m=1 executor ≡ plain FedAvg aggregation (the consensus path)."""
         model, gp_list, membership, X, Y, n, keys = _setup(m=1, K=8)
