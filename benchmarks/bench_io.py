@@ -72,6 +72,15 @@ def record_run(filename: str, metrics: dict, *, watch=(), factor: float = 2.0):
     it grew by > factor, e.g. a wall time). The reference value per key is
     the best same-mode recorded value; the run is appended only when it does
     not regress. Returns (regression, details).
+
+    Two suites may share one BENCH file (round_exec and mesh2d both append
+    to BENCH_round_exec.json); runs are distinguished by which watched keys
+    they carry, and the keep-window applies to the appending suite's own
+    runs only (those carrying any of its watched keys) — appending never
+    evicts another suite's history (and with it, its gate baseline) from
+    the file, and the file's chronological order is preserved. A call with
+    no watched keys falls back to the whole-file window. See
+    docs/benchmarks.md.
     """
     path = os.path.join(REPO_ROOT, filename)
     data = _load(path)
@@ -92,9 +101,23 @@ def record_run(filename: str, metrics: dict, *, watch=(), factor: float = 2.0):
             details.append(f"{key}: best {a:.3g} -> {b:.3g} "
                            f"(>{factor}x {direction}-regression)")
     if not regression:
-        data["runs"] = (data["runs"]
-                        + [{**metrics, "timestamp": round(time.time(), 1)}]
-                        )[-_KEEP_RUNS:]
+        new_entry = {**metrics, "timestamp": round(time.time(), 1)}
+        watch_keys = [k for k, _ in watch]
+        if watch_keys:
+            # trim only THIS suite's runs (those carrying any of its
+            # watched keys), oldest first, in place — other suites' runs
+            # and the file's chronological order are untouched
+            mine = lambda r: any(k in r for k in watch_keys)
+            drop = max(0, sum(map(mine, data["runs"])) + 1 - _KEEP_RUNS)
+            kept = []
+            for r in data["runs"]:
+                if drop > 0 and mine(r):
+                    drop -= 1
+                    continue
+                kept.append(r)
+            data["runs"] = kept + [new_entry]
+        else:
+            data["runs"] = (data["runs"] + [new_entry])[-_KEEP_RUNS:]
         with open(path, "w") as f:
             json.dump(data, f, indent=1)
             f.write("\n")

@@ -1,0 +1,123 @@
+"""Docs freshness gate: doctests + referenced-path existence.
+
+Two checks, both run as the "docs" entry of benchmarks/run.py (always
+included under ``--quick``, so stale docs fail the same CI gate as perf
+regressions — see docs/benchmarks.md):
+
+  * every doctest in the documented modules (``fed.store``,
+    ``fed.population``, ``fed.parallel``, ``sharding.specs``) must pass —
+    the examples embedded in the module docstrings are executable and
+    therefore cannot silently rot;
+  * every repo path referenced from README.md and docs/*.md must exist:
+    markdown link targets plus inline-code tokens that look like repo
+    paths (a known file extension, or a ``src``-style module path). A
+    deleted or renamed file referenced by the docs turns the gate red.
+
+tests/test_docs.py runs the same checks under pytest (tier-1), so a stale
+doc fails locally before it fails the gate.
+"""
+from __future__ import annotations
+
+import doctest
+import glob
+import os
+import re
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOCUMENTED_MODULES = ("repro.fed.store", "repro.fed.population",
+                      "repro.fed.parallel", "repro.sharding.specs")
+DOC_FILES = ("README.md", "docs/architecture.md", "docs/scaling.md",
+             "docs/benchmarks.md")
+
+# inline-code tokens that count as repo path references: plain path chars
+# only (rules out prose like `m=5/K=50`), and either a known file
+# extension or a multi-segment path starting at a repo top-level dir.
+_PATH_TOKEN = re.compile(r"^[A-Za-z0-9_.*/-]+$")
+_KNOWN_EXT = (".py", ".md", ".json")
+_TOP_DIRS = ("src", "docs", "tests", "benchmarks", "examples")
+
+
+def run_doctests() -> dict:
+    """-> {module: attempted}; raises on any doctest failure."""
+    import importlib
+    out = {}
+    for name in DOCUMENTED_MODULES:
+        mod = importlib.import_module(name)
+        res = doctest.testmod(mod, verbose=False)
+        if res.failed:
+            raise RuntimeError(
+                f"{res.failed} doctest failure(s) in {name} — the module "
+                f"docstring examples are stale (docs/benchmarks.md)")
+        out[name] = res.attempted
+    return out
+
+
+def referenced_paths(md_text: str):
+    """Candidate repo paths referenced by one markdown document."""
+    refs = set()
+    for target in re.findall(r"\]\(([^)#]+)\)", md_text):
+        target = target.strip()
+        if not target or target.startswith(("http://", "https://")):
+            continue
+        refs.add(target)
+    for token in re.findall(r"`([^`\n]+)`", md_text):
+        token = token.strip().rstrip("/")
+        if not token or not _PATH_TOKEN.match(token):
+            continue
+        multi = "/" in token
+        if token.endswith(_KNOWN_EXT) or \
+                (multi and token.split("/")[0] in _TOP_DIRS):
+            refs.add(token)
+    return refs
+
+
+def _exists(path: str, doc_dir: str = "") -> bool:
+    """Resolve relative to the repo root, the referencing doc's own
+    directory (docs/*.md link ``../BENCH_*.json``), and ``src/repro``
+    (module-style references like ``fed/store.py``)."""
+    candidates = (path, os.path.join(doc_dir, path),
+                  os.path.join("src", "repro", path))
+    for base in candidates:
+        full = os.path.normpath(os.path.join(_REPO, base))
+        if "*" in base:
+            if glob.glob(full):
+                return True
+        elif os.path.exists(full):
+            return True
+    return False
+
+
+def check_doc_links() -> dict:
+    """-> {"files": n_docs, "refs": n_refs}; raises listing missing paths."""
+    missing, n_refs, n_docs = [], 0, 0
+    for doc in DOC_FILES:
+        full = os.path.join(_REPO, doc)
+        if not os.path.exists(full):
+            missing.append(f"{doc} (the doc itself)")
+            continue
+        n_docs += 1
+        with open(full) as f:
+            refs = referenced_paths(f.read())
+        n_refs += len(refs)
+        missing.extend(f"{doc} -> {r}" for r in sorted(refs)
+                       if not _exists(r, os.path.dirname(doc)))
+    if missing:
+        raise RuntimeError(
+            "stale docs — referenced paths do not exist: " +
+            "; ".join(missing) + " (gate semantics: docs/benchmarks.md)")
+    return {"files": n_docs, "refs": n_refs}
+
+
+def main(quick: bool = False):
+    tested = run_doctests()
+    links = check_doc_links()
+    print(f"\n# Docs check: {sum(tested.values())} doctests over "
+          f"{len(tested)} modules, {links['refs']} path references over "
+          f"{links['files']} documents — all fresh")
+    return {"doctests": sum(tested.values()), "doc_files": links["files"],
+            "path_refs": links["refs"]}
+
+
+if __name__ == "__main__":
+    main()

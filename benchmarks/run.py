@@ -4,8 +4,12 @@
   table3     framework comparison + ablations  (paper Table 3)
   round_exec fused round executor vs the retired per-group loops
              (static + IFCA/FeSEM dynamic assignment, m=5/K=50)
+  mesh2d     2-D (data, model) mesh vs the 1-D data mesh round time
+             (m=5/K=50, 4 forced host devices, appended to
+             BENCH_round_exec.json)
   population streamed ClientStore cohorts vs the pinned stacks +
              double-buffered prefetch overlap (N=10^4-10^5 virtual clients)
+  docs       docs freshness: module doctests + README/docs path existence
   fig5       EDC vs MADC linearity             (paper Fig. 5)
   cost       clustering-measure cost           (paper §3.3 complexity claim)
   roofline   per-(arch×shape) roofline terms   (deliverable g)
@@ -18,14 +22,16 @@
 Exit status is nonzero when a bench fails OR when a bench reports a perf
 regression >2x against its committed BENCH_*.json baseline (cost watches
 the MADC dispatch's relative speed; round_exec the static/IFCA/FeSEM
-executor speedups; population the streamed-vs-pinned round-time ratio and
-the prefetch-overlap speedup). Gate failures print a per-entry diff —
-which bench, crash vs watched-metric regression, best recorded ->
-measured — before the nonzero exit. ``--quick`` always includes the
-round_exec and population suites, even under ``--only``:
+executor speedups; mesh2d the 2-D/1-D round-time ratio; population the
+streamed-vs-pinned round-time ratio and the prefetch-overlap speedup) —
+docs/benchmarks.md documents the BENCH_*.json schema and the gate
+semantics. Gate failures print a per-entry diff — which bench, crash vs
+watched-metric regression, best recorded -> measured — before the nonzero
+exit. ``--quick`` always includes the round_exec, mesh2d, population and
+docs suites, even under ``--only``:
 
 ``python -m benchmarks.run --quick --only cost,table3``  — the CI perf gate
-(effectively cost,table3,round_exec,population)
+(effectively cost,table3,round_exec,mesh2d,population,docs)
 """
 from __future__ import annotations
 
@@ -37,15 +43,17 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks import (clustering_cost, eta_g_sweep, fig5_edc_madc,
-                        population_bench, roofline, table1_heterogeneity,
-                        table3_frameworks)
+from benchmarks import (clustering_cost, docs_check, eta_g_sweep,
+                        fig5_edc_madc, mesh2d, population_bench, roofline,
+                        table1_heterogeneity, table3_frameworks)
 
 BENCHES = {
     "table1": table1_heterogeneity.main,
     "table3": table3_frameworks.main,
     "round_exec": table3_frameworks.round_executor_bench,
+    "mesh2d": mesh2d.main,
     "population": population_bench.main,
+    "docs": docs_check.main,
     "fig5": fig5_edc_madc.main,
     "cost": clustering_cost.main,
     "eta_g": eta_g_sweep.main,
@@ -54,7 +62,9 @@ BENCHES = {
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        epilog="BENCH_*.json schema and the >2x regression-gate semantics "
+               "are documented in docs/benchmarks.md.")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(BENCHES))
@@ -64,9 +74,9 @@ def main(argv=None) -> int:
 
     names = list(BENCHES) if not args.only else args.only.split(",")
     if args.quick:
-        # the CI gate must always exercise the round-executor and
-        # population (streamed cohort) suites
-        for required in ("round_exec", "population"):
+        # the CI gate must always exercise the round-executor, 2-D mesh
+        # and population (streamed cohort) suites, plus the docs check
+        for required in ("round_exec", "mesh2d", "population", "docs"):
             if required not in names:
                 names.append(required)
     print("name,us_per_call,derived")
@@ -100,7 +110,8 @@ def main(argv=None) -> int:
     if failures:
         # per-entry diff instead of a bare nonzero exit: which bench, crash
         # vs watched-metric regression, best recorded value -> measured
-        print("\n# GATE FAILURES")
+        print("\n# GATE FAILURES (schema + gate semantics: "
+              "docs/benchmarks.md)")
         for name, kind, details in failures:
             for d in details:
                 print(f"  {name} [{kind}]: {d}")

@@ -27,6 +27,9 @@ cohorts from a host-resident ``ClientStore``; the newcomer *arrival
 process* then feeds the eq.-9 client cold start round after round — the
 regime the paper's cold-start mechanism is designed for — with the
 pre-training directions cached in the persistent per-client state table.
+Both feeding modes ride the executor's mesh placement (1-D client
+parallelism, or the 2-D ``(data, model)`` mesh that additionally shards
+the local solver's parameter dim — docs/scaling.md).
 """
 from __future__ import annotations
 

@@ -13,8 +13,11 @@ Two feeding modes share one compiled round program:
     memory (or disk, with memmapped shards) instead of device memory.
 
 When more than one device is visible the round executor's client axis is
-sharded over a "data" mesh (``fed.parallel.make_sharded_executor``); a
-single device gets the plain jit path. Cohort *selection* draws from a
+sharded over the mesh's data axes (``fed.parallel.make_sharded_executor``);
+a single device gets the plain jit path, and a 2-D ``(data, model)`` mesh
+(``launch.mesh.make_fed_mesh`` / ``REPRO_MODEL_AXIS``) additionally shards
+the local solver's parameter dim over "model" — see docs/scaling.md.
+Cohort *selection* draws from a
 dedicated ``select_rng`` stream (distinct from the cold-start/ablation
 ``rng``), so a same-seed streamed population reproduces the pinned
 trainer's selection sequence exactly.
@@ -120,8 +123,9 @@ class FedAvgTrainer:
         self.model_size = param_count(self.params)
         self.comm_params = 0        # cumulative parameters transferred
         self._round_exec = None     # lazily-built single-dispatch round
-        # client axis sharded over "data" on multi-device (None = plain jit)
-        self.mesh = parallel_lib.default_data_mesh() if mesh is None else mesh
+        # client axis sharded over "data" on multi-device (None = plain
+        # jit); REPRO_MODEL_AXIS>1 auto-builds the 2-D (data, model) mesh
+        self.mesh = parallel_lib.default_fed_mesh() if mesh is None else mesh
         if population is not None:
             population.attach(cfg, self.mesh)
             self._train_stack = self._test_stack = None

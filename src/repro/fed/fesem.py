@@ -21,7 +21,11 @@ In ``population=`` mode the (N, d_w) matrix stays host-resident in the
 ``ClientStateTable`` (lazy rows); each round gathers only the cohort's
 (K, d_w) rows to device, runs the *same* compiled round with cohort-local
 ids, and scatters the updated rows back — dynamic assignment keeps working
-when the population no longer fits on device.
+when the population no longer fits on device. The write-back goes through
+``Population.scatter_local_flat``: split per data shard and applied on a
+background writer thread (drained before any gather), so on a 2-D
+``(data, model)`` mesh each simulated host scatters only its cohort
+slice — see docs/scaling.md.
 """
 from __future__ import annotations
 
@@ -93,8 +97,9 @@ class FeSEMTrainer(GroupedTrainer):
             # state-table gather: cohort rows with cohort-local ids — the
             # executor program is byte-identical to the pinned one, the
             # E-step gather/M-step scatter just act on (K, d_w) instead of
-            # the full (N, d_w)
-            rows = jnp.asarray(self.population.state.gather_local_flat(idx))
+            # the full (N, d_w). The population gather drains the async
+            # writer first, so last round's per-shard scatters are visible.
+            rows = jnp.asarray(self.population.gather_local_flat(idx))
             state = {"local_flat": rows,
                      "idx": jnp.arange(len(idx), dtype=jnp.int32)}
         else:
@@ -103,7 +108,9 @@ class FeSEMTrainer(GroupedTrainer):
         out = self._round_executor()(self.group_params, state, x, y, n, keys)
         self.group_params = out.group_params
         if self.population is not None:
-            self.population.state.scatter_local_flat(
+            # async per-shard write-back: overlaps evaluation + the next
+            # cohort's H2D; the next gather_local_flat drains it first
+            self.population.scatter_local_flat(
                 idx, np.asarray(out.assign_state["local_flat"]))
         else:
             self.local_flat = out.assign_state["local_flat"]

@@ -13,6 +13,11 @@ ONE device dispatch per round — the retired estimate-then-loop baseline
 survives as ``fed.rounds.serial_ifca_round``. Fusion changes only the
 dispatch count; the m× broadcast *communication accounting* is exactly the
 seed's ((m+1) model transfers per selected client per round).
+
+On a mesh the fused assignment rides the executor's placement unchanged:
+the per-client losses shard over the data axes with the cohort, and on a
+2-D ``(data, model)`` mesh the m stacked models' parameter dim shards
+over "model" (docs/scaling.md) — the argmin still runs in-program.
 """
 from __future__ import annotations
 

@@ -2,10 +2,19 @@
 distributed workload (the TPU-native replacement for the per-client loop).
 
 The serial trainers' sharding helpers live here too: ``default_data_mesh``
-(a 1-D "data" mesh over all visible devices, None on one device) and
-``make_sharded_executor`` (jit of a round executor with the client axis of
-every K-leading input placed sharded over "data") — so the same fused
-round runs client-parallel everywhere, not just under the dry-run below.
+(a 1-D "data" mesh over all visible devices, None on one device),
+``default_fed_mesh`` (its 2-D ``(data, model)`` generalization, picked by
+``REPRO_MODEL_AXIS``), and ``make_sharded_executor`` (jit of a round
+executor with the client axis of every K-leading input sharded over the
+mesh's data axes and — on a 2-D mesh — the m-stacked group parameters
+sharded over "model" along the local solver's largest divisible parameter
+dim, per ``sharding.specs.group_param_pspec``; a model axis of size 1
+replicates, so the 1-device and 1-D paths are special cases) — the same
+fused round runs client-parallel everywhere, not just under the dry-run
+below. ``put_sharded_cohort`` is the multi-host-style feeding primitive:
+per-data-shard host arrays go device-side with one H2D put per shard and
+are assembled into a single global array via
+``jax.make_array_from_single_device_arrays`` (see docs/scaling.md).
 
 Two jittable entry points, both lowered by the FedGroup dry-run:
 
@@ -28,13 +37,17 @@ the shardings chosen in launch/fed_dryrun.py.
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.modules import flatten_updates
+from repro.sharding.specs import (MP_AXIS, cohort_pspec, data_axis_names,
+                                  group_param_pspec)
 
 
 # ---------------------------------------------------------------------------
@@ -51,12 +64,47 @@ def default_data_mesh():
     return jax.make_mesh((n,), ("data",))
 
 
+def default_fed_mesh(model_axis: int | None = None):
+    """The trainers' auto-detected mesh, generalized to 2-D.
+
+    ``model_axis`` (default: ``REPRO_MODEL_AXIS`` env var, 1) is the size
+    of the "model" axis the local solver's parameter dim shards over;
+    the remaining devices form the "data" (client) axis. ``model_axis=1``
+    degrades exactly to ``default_data_mesh()`` — the 1-D path (and None
+    on a single device) is the special case, so existing behaviour is
+    unchanged unless a model axis is asked for.
+    """
+    if model_axis is None:
+        model_axis = int(os.environ.get("REPRO_MODEL_AXIS", "1"))
+    if model_axis <= 1:
+        return default_data_mesh()
+    n = jax.device_count()
+    if n % model_axis:
+        raise ValueError(f"model_axis={model_axis} does not divide the "
+                         f"{n} visible devices")
+    return jax.make_mesh((n // model_axis, model_axis), ("data", MP_AXIS))
+
+
+def mesh_data_shards(mesh) -> int:
+    """Number of data-axis slices of ``mesh`` (1 for mesh=None) — the
+    shard count of the client axis and of ``fed.store.ShardedClientStore``
+    cohort slices."""
+    if mesh is None:
+        return 1
+    total = 1
+    for a in data_axis_names(mesh):
+        total *= mesh.shape[a]
+    return total
+
+
 def shard_client_axis(mesh, tree):
     """device_put every array leaf with its leading (client) axis sharded
-    over the mesh "data" axes when divisible, replicated otherwise.
+    over the mesh *data* axes when divisible, replicated otherwise.
     ``mesh=None`` degrades to a plain asynchronous ``jax.device_put`` — the
     unified H2D entry the population prefetcher uses, so streamed cohorts
     land pre-placed for the executor on one device and on a mesh alike.
+    On a 2-D ``(data, model)`` mesh only the data axes consume the client
+    axis; the model axis replicates (it shards parameters, not clients).
 
     Works on arbitrary pytrees, so the dynamic-assignment state (e.g.
     FeSEM's {"local_flat", "idx"}) shards leaf-by-leaf: local_flat by rows
@@ -65,14 +113,13 @@ def shard_client_axis(mesh, tree):
     if mesh is None:
         return jax.tree_util.tree_map(
             lambda l: jax.device_put(jnp.asarray(l)), tree)
-    total = 1
-    for a in mesh.axis_names:
-        total *= mesh.shape[a]
+    axes = data_axis_names(mesh)
+    total = mesh_data_shards(mesh)
 
     def put(leaf):
         leaf = jnp.asarray(leaf)
         if leaf.ndim >= 1 and leaf.shape[0] % total == 0 and leaf.shape[0]:
-            spec = P(mesh.axis_names, *([None] * (leaf.ndim - 1)))
+            spec = cohort_pspec(leaf.ndim, data_axes=axes)
         else:
             spec = P(*([None] * leaf.ndim))
         return jax.device_put(leaf, NamedSharding(mesh, spec))
@@ -80,26 +127,76 @@ def shard_client_axis(mesh, tree):
     return jax.tree_util.tree_map(put, tree)
 
 
+def put_sharded_cohort(mesh, parts):
+    """Assemble per-shard host arrays into one mesh-global cohort array.
+
+    ``parts`` is a list of same-structure pytrees, one per data-axis slice
+    (``fed.store.ShardedClientStore.gather_train_shards`` output): shard
+    ``s`` holds the rows the mesh's s-th data slice will own. Each shard's
+    arrays are device_put *onto that slice's devices only* — one H2D
+    transfer per shard, never a host-side concatenation of the full cohort
+    — and stitched into a single global array with
+    ``jax.make_array_from_single_device_arrays``. On one machine this
+    simulates the multi-host feeding path exactly: a real multi-pod
+    deployment runs the same code with each host contributing only its
+    local shard. Falls back to ``shard_client_axis`` over the concatenated
+    cohort when the row count does not divide the data axes (replication —
+    the same degradation the non-divisible 1-D path takes).
+    """
+    n_shards = mesh_data_shards(mesh) if mesh is not None else 1
+    if mesh is None or n_shards != len(parts):
+        merged = jax.tree_util.tree_map(
+            lambda *ls: np.concatenate([np.asarray(l) for l in ls]), *parts)
+        return shard_client_axis(mesh, merged)
+    axes = data_axis_names(mesh)
+
+    def one(*leaf_parts):
+        leaf_parts = [np.asarray(l) for l in leaf_parts]
+        rows = sum(l.shape[0] for l in leaf_parts)
+        block = rows // n_shards
+        if block * n_shards != rows or \
+                any(l.shape[0] != block for l in leaf_parts):
+            return shard_client_axis(mesh, np.concatenate(leaf_parts))
+        gshape = (rows,) + leaf_parts[0].shape[1:]
+        sharding = NamedSharding(mesh, cohort_pspec(len(gshape), axes))
+        arrs = []
+        for dev, index in sharding.addressable_devices_indices_map(
+                gshape).items():
+            r = index[0]
+            lo = 0 if r.start is None else int(r.start)
+            arrs.append(jax.device_put(leaf_parts[lo // block], dev))
+        return jax.make_array_from_single_device_arrays(
+            gshape, sharding, arrs)
+
+    return jax.tree_util.tree_map(one, *parts)
+
+
 def make_sharded_executor(round_fn, mesh=None):
     """jit ``round_fn`` (a ``fed.rounds.make_round_executor`` product) with
     its client axis sharded over ``mesh``.
 
     mesh=None (single device) is the plain-jit special case. With a mesh,
-    group parameters are replicated and the K-axis inputs (membership or
-    assignment state, X, Y, n, keys) are placed with their leading axis
-    sharded over "data" before dispatch — the compiled round then runs
-    client-parallel exactly like ``make_parallel_round`` under the dry-run
-    mesh, with XLA inserting the segment-sum all-reduces.
+    the K-axis inputs (membership or assignment state, X, Y, n, keys) are
+    placed with their leading axis sharded over the data axes before
+    dispatch, and the m-stacked group parameters are placed per
+    ``sharding.specs.group_param_pspec``: replicated on a 1-D (or
+    model-axis-1) mesh — the PR-2 behaviour — or sharded over "model"
+    along the local solver's largest divisible parameter dim on a 2-D
+    ``(data, model)`` mesh. The compiled round then runs client-parallel
+    over "data" and solver-parallel over "model", with XLA inserting the
+    segment-sum and contraction all-reduces.
     """
     jfn = jax.jit(round_fn)
     if mesh is None:
         return jfn
-    replicate = lambda t: jax.tree_util.tree_map(
+    model_size = dict(mesh.shape).get(MP_AXIS, 1)
+    place_groups = lambda t: jax.tree_util.tree_map(
         lambda l: jax.device_put(
-            l, NamedSharding(mesh, P(*([None] * jnp.ndim(l))))), t)
+            l, NamedSharding(mesh, group_param_pspec(jnp.shape(l),
+                                                     model_size))), t)
 
     def call(group_params, assign, X, Y, n, keys):
-        group_params = replicate(group_params)
+        group_params = place_groups(group_params)
         assign, X, Y, n, keys = (shard_client_axis(mesh, t)
                                  for t in (assign, X, Y, n, keys))
         return jfn(group_params, assign, X, Y, n, keys)

@@ -15,7 +15,18 @@ is the large-N replacement. A ``Population`` bundles
     cohort, gathers its padded arrays from the store, and starts the H2D
     transfer (``jax.device_put`` is asynchronous) while the device is still
     executing round t's compiled executor — the transfer hides behind
-    compute instead of serializing with it.
+    compute instead of serializing with it. Over a
+    ``fed.store.ShardedClientStore`` + a mesh the prefetcher goes
+    *per-shard*: each data-axis slice's rows are gathered and device_put
+    separately and assembled into one global cohort array with
+    ``jax.make_array_from_single_device_arrays``
+    (``fed.parallel.put_sharded_cohort``) — the multi-host feeding path,
+    simulated on one machine,
+  * an *async state writer*: FeSEM's per-cohort ``local_flat`` rows are
+    scattered back into the host state table split per shard on a
+    background thread; any reader drains the write queue first, so the
+    asynchrony is invisible to program semantics (streamed results stay
+    bit-identical to pinned — docs/scaling.md spells out the guarantee).
 
 The trainers' ``population=`` mode consumes this through three calls:
 ``next_cohort()`` (the scheduled, prefetched round batch),
@@ -37,7 +48,57 @@ import jax
 import numpy as np
 
 from repro.fed import parallel as parallel_lib
-from repro.fed.store import SELECT_STREAM, ClientStateTable, ClientStore
+from repro.fed.store import (SELECT_STREAM, ClientStateTable, ClientStore,
+                             ShardedClientStore, shard_cohort_slices)
+
+
+class _AsyncStateWriter:
+    """Single background thread applying host state-table writes in FIFO
+    order — the asynchronous half of the per-shard scatter. ``drain()``
+    blocks until every enqueued write has landed; readers call it before
+    any gather, so the asynchrony never reorders a read past a write and
+    streamed results stay bit-identical to the synchronous path."""
+
+    def __init__(self):
+        self._q = queue.Queue()
+        self._thread = None
+        self._err = None
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                fn, args = item
+                try:
+                    fn(*args)
+                except BaseException as e:  # noqa: BLE001 — raised in drain
+                    self._err = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, fn, *args):
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._run, name="state-table-writer", daemon=True)
+            self._thread.start()
+        self._q.put((fn, args))
+
+    def drain(self):
+        if self._thread is not None:
+            self._q.join()
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise RuntimeError("async state-table write failed") from err
+
+    def close(self):
+        if self._thread is not None:
+            self._q.join()                  # pending writes land first —
+            self._q.put(None)               # only then stop the worker
+            self._thread.join(timeout=5.0)
+            self._thread = None
+        self.drain()                        # surface any write error
 
 
 @dataclass
@@ -222,6 +283,7 @@ class Population:
         self._thread = None
         self._stop = threading.Event()
         self._producer_error = None
+        self._writer = _AsyncStateWriter()
         self._warned_eval_scale = False
         self._cohort = None            # live (most recently consumed) cohort
         self._eval_ids = None
@@ -251,6 +313,23 @@ class Population:
         is present; plain async device_put otherwise)."""
         return parallel_lib.shard_client_axis(self.mesh, arrays)
 
+    def _n_shards(self) -> int:
+        return parallel_lib.mesh_data_shards(self.mesh)
+
+    def _gather_put(self, split: str, idx):
+        """Store gather + H2D for a cohort. Over a ``ShardedClientStore``
+        + a mesh this goes per shard: each data slice's rows are gathered
+        and device_put separately, then assembled into one global array
+        (``fed.parallel.put_sharded_cohort``) — no host-side concatenation
+        of the full cohort, which is what a real multi-host deployment
+        cannot do. Everything else takes the single-gather path."""
+        store = self.store
+        if self.mesh is not None and isinstance(store, ShardedClientStore):
+            parts = store._gather_shards(split, idx, self._n_shards())
+            if parts is not None:
+                return parallel_lib.put_sharded_cohort(self.mesh, parts)
+        return self._put(store._gather(split, np.asarray(idx, np.int64)))
+
     def device_batch(self, idx):
         """(x, y, n) on device for an arbitrary id set. Ids inside the live
         cohort are sliced from its already-transferred arrays (the cold-
@@ -263,7 +342,30 @@ class Population:
                 if len(pos) == len(c.idx) and np.all(pos == np.arange(len(pos))):
                     return c.x, c.y, c.n
                 return c.x[pos], c.y[pos], c.n[pos]
-        return self._put(self.store.gather_train(idx))
+        return self._gather_put("train", idx)
+
+    # -- persistent state (per-shard async scatter) ------------------------
+    def gather_local_flat(self, idx) -> np.ndarray:
+        """Cohort rows of FeSEM's host ``local_flat`` table. Drains the
+        async writer first, so a gather always observes every earlier
+        scatter — the read side of the determinism guarantee."""
+        self._writer.drain()
+        return self.state.gather_local_flat(idx)
+
+    def scatter_local_flat(self, idx, rows):
+        """Write the cohort's updated ``local_flat`` rows back into the
+        host table, split into per-data-shard slices and applied on the
+        background writer thread — the round's host-side bookkeeping
+        overlaps evaluation and the next cohort's gather instead of
+        blocking the training loop (on multi-host, each host scatters
+        its own slice)."""
+        idx = np.asarray(idx)
+        rows = np.asarray(rows)
+        slices = shard_cohort_slices(len(idx), self._n_shards()) \
+            or [(0, len(idx))]
+        for lo, hi in slices:
+            self._writer.submit(self.state.scatter_local_flat,
+                                idx[lo:hi].copy(), rows[lo:hi])
 
     # -- streamed cohorts --------------------------------------------------
     def _produce(self):
@@ -272,7 +374,7 @@ class Population:
                 if self._stop.is_set():
                     return
                 idx, n_new = self.scheduler.select(t, self._k, self._dropout)
-                x, y, n = self._put(self.store.gather_train(idx))
+                x, y, n = self._gather_put("train", idx)
                 cohort = Cohort(t, np.asarray(idx), x, y, n, n_new)
                 while not self._stop.is_set():
                     try:
@@ -302,7 +404,7 @@ class Population:
             t = self.rounds_streamed
             idx, n_new = self.scheduler.select(t, self._k, self._dropout)
             cohort = Cohort(t, np.asarray(idx),
-                            *self._put(self.store.gather_train(idx)), n_new)
+                            *self._gather_put("train", idx), n_new)
         else:
             if self._thread is None:
                 self._queue = queue.Queue(maxsize=self.cfg.prefetch)
@@ -330,6 +432,8 @@ class Population:
                 pass
             self._thread.join(timeout=2.0)
             self._thread = None
+        # flush + stop the async state writer (pending scatters land first)
+        self._writer.close()
 
     # -- streamed evaluation ----------------------------------------------
     def eval_ids(self) -> np.ndarray:
@@ -353,5 +457,5 @@ class Population:
         B = max(int(self.cfg.eval_batch), 1)
         for lo in range(0, len(idx), B):
             block = idx[lo:lo + B]
-            x, y, n = self._put(self.store.gather_test(block))
+            x, y, n = self._gather_put("test", block)
             yield block, x, y, n

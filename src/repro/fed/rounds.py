@@ -20,9 +20,12 @@ are all fused into the same program, so
     the server still ships all m models per round, we just price it
     without also paying m dispatches), and
   * ``fed.parallel.make_parallel_round`` re-exports it for the mesh path;
-    the serial trainers shard the client axis over a "data" mesh through
-    ``fed.parallel.make_sharded_executor`` whenever more than one device
-    is visible (plain jit is the 1-device special case)
+    the serial trainers shard the client axis over the mesh's data axes
+    through ``fed.parallel.make_sharded_executor`` whenever more than one
+    device is visible, and a 2-D ``(data, model)`` mesh additionally
+    shards the local solver's parameter dim over "model"
+    (``sharding.specs.group_param_pspec``; plain jit is the 1-device
+    special case and replication the model-axis-1 one — docs/scaling.md)
 
 — one compiled round instead of the seed's ``m`` solver launches plus a
 dozen host-synchronizing aggregation dispatches per round.

@@ -21,6 +21,24 @@ membership / cold flags (FedGroup eq. 9), FeSEM's flattened local models
 gathers cohort rows, the M-step scatter writes them back), and the cached
 pre-training directions of cold-started clients. Rows are materialized
 lazily so memory scales with the number of clients ever touched, not N.
+
+``ShardedClientStore`` is the multi-host story (docs/scaling.md): it wraps
+any inner store and decomposes every cohort gather into ``n_shards``
+contiguous slices — shard ``s`` gathers exactly the rows the mesh's s-th
+data-axis slice will hold, so on a real deployment each host touches only
+its own slice (here the slices are simulated on one machine). The slice
+arithmetic is a pure function:
+
+>>> from repro.fed.store import shard_cohort_slices
+>>> shard_cohort_slices(8, 4)                     # K=8 cohort, 4 shards
+[(0, 2), (2, 4), (4, 6), (6, 8)]
+>>> shard_cohort_slices(7, 4) is None             # non-divisible: fall back
+True
+
+``fed.parallel.put_sharded_cohort`` consumes the per-shard gathers (one
+H2D put per shard into ``jax.make_array_from_single_device_arrays``), and
+``fed.population`` scatters state-table writes back per shard
+asynchronously.
 """
 from __future__ import annotations
 
@@ -256,6 +274,72 @@ class VirtualClientStore(ClientStore):
                 x[r], y[r] = c[pick[xk]], c[pick[yk]]
         n = (self.n_train if split == "train" else self.n_test)[idx]
         return x, y, n
+
+
+def shard_cohort_slices(K: int, n_shards: int):
+    """Contiguous equal (lo, hi) cohort slices, one per data shard — the
+    exact row blocks a leading-axis NamedSharding over the data axes
+    assigns to each slice. None when ``n_shards`` does not divide ``K``
+    (callers then fall back to the replicated single-gather path, matching
+    ``fed.parallel.shard_client_axis``'s non-divisible degradation)."""
+    if n_shards <= 0 or K % n_shards:
+        return None
+    block = K // n_shards
+    return [(s * block, (s + 1) * block) for s in range(n_shards)]
+
+
+class ShardedClientStore(ClientStore):
+    """Host-sharded population view: ``n_shards`` simulated hosts, each
+    gathering only its cohort slice.
+
+    Wraps any inner ``ClientStore`` (materialized, virtual, memmapped) and
+    keeps its metadata/size vectors; the one behavioural change is that
+    gathers decompose per shard. ``gather_train_shards`` /
+    ``gather_test_shards`` return the per-shard padded host arrays (shard
+    ``s`` covers cohort rows ``[s*K/S, (s+1)*K/S)`` — the rows the mesh's
+    s-th data slice owns, so each simulated host's gather is exactly what
+    that host would fetch from its local store partition), and the plain
+    ``ClientStore`` API is the concatenation of the shard gathers — a
+    ``ShardedClientStore`` is drop-in wherever a store is accepted, with
+    bit-identical cohorts (tests/test_mesh2d.py proves the round trip).
+    """
+
+    def __init__(self, inner: ClientStore, n_shards: int):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.inner = inner
+        self.n_shards = int(n_shards)
+        self.name = f"{inner.name}@sharded{n_shards}"
+        self.n_clients = inner.n_clients
+        self.n_classes = inner.n_classes
+        self.max_train = inner.max_train
+        self.max_test = inner.max_test
+        self.feat = inner.feat
+        self.n_train = inner.n_train
+        self.n_test = inner.n_test
+
+    def _gather_shards(self, split: str, idx, n_shards: int | None = None):
+        """-> list of per-shard (x, y, n) host tuples, or None when the
+        shard count does not divide the cohort size."""
+        idx = np.asarray(idx, np.int64)
+        slices = shard_cohort_slices(len(idx),
+                                     n_shards or self.n_shards)
+        if slices is None:
+            return None
+        return [self.inner._gather(split, idx[lo:hi]) for lo, hi in slices]
+
+    def gather_train_shards(self, idx, n_shards: int | None = None):
+        return self._gather_shards("train", idx, n_shards)
+
+    def gather_test_shards(self, idx, n_shards: int | None = None):
+        return self._gather_shards("test", idx, n_shards)
+
+    def _gather(self, split, idx):
+        parts = self._gather_shards(split, idx)
+        if parts is None:                     # non-divisible cohort
+            return self.inner._gather(split, idx)
+        return tuple(np.concatenate([p[i] for p in parts])
+                     for i in range(3))
 
 
 class _LazyRows:

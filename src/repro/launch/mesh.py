@@ -22,6 +22,15 @@ def make_local_mesh():
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
+def make_fed_mesh(data: int, model: int = 1):
+    """Federated-round mesh: the round executor's client axis shards over
+    "data" (``data`` slices — cohorts, ShardedClientStore shards) and the
+    local solver's parameter dim over "model" (``model``-way, replicated
+    when 1). ``data * model`` must equal the visible device count; see
+    docs/scaling.md for the placement rules."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
 # Hardware constants for the roofline model (TPU v5e).
 PEAK_FLOPS_BF16 = 197e12          # per chip, bf16
 HBM_BW = 819e9                    # bytes/s per chip

@@ -1,4 +1,25 @@
-"""PartitionSpec rules per architecture.
+"""PartitionSpec rules: per-architecture tensor parallelism + the federated
+round executor's 2-D ``(data, model)`` placement.
+
+Two families of specs live here:
+
+  * the per-architecture rules below (``param_specs`` / ``state_specs`` /
+    ``data_specs`` / ``cache_specs``) used by the launch dry-runs, and
+  * the *federated-round* specs (``cohort_pspec`` / ``group_param_pspec`` /
+    ``group_param_specs`` / ``data_axis_names``) used by
+    ``fed.parallel.make_sharded_executor``: the vmapped client batch shards
+    its leading (client) axis over the mesh's data axes, and the m-stacked
+    group parameters shard their largest divisible non-group dim over
+    "model" — replicated when the model axis has size 1, so the 1-device
+    and 1-D-mesh paths are special cases of the same placement.
+
+>>> from repro.sharding.specs import cohort_pspec, group_param_pspec
+>>> cohort_pspec(2, data_axes=("data",))          # (K, max_n) client batch
+PartitionSpec(('data',), None)
+>>> group_param_pspec((3, 16, 10), model_size=2)  # m-stacked (m, d, C) leaf
+PartitionSpec(None, 'model', None)
+>>> group_param_pspec((3, 16, 10), model_size=1)  # model axis 1: replicate
+PartitionSpec(None, None, None)
 
 Tensor-parallel scheme over the "model" mesh axis (size MP=16):
   embedding / lm_head        shard the (padded) vocab dim
@@ -162,6 +183,55 @@ def state_specs(state_template, cfg: ArchConfig, mp: int = 16,
                           fsdp_axis="data" if (zero or fsdp) else None,
                           moe_2d=moe_2d)
     return {"params": p_specs, "mu": m_specs, "nu": m_specs, "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# Federated round executor (fed.parallel) — 2-D (data, model) placement
+# ---------------------------------------------------------------------------
+
+def data_axis_names(mesh) -> tuple:
+    """The mesh axes the client (cohort) axis shards over: the data-ish
+    axes ("pod", "data") when present, every axis of a mesh that has
+    neither (the legacy 1-D case)."""
+    named = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return named or tuple(mesh.axis_names)
+
+
+def cohort_pspec(ndim: int, data_axes=("data",)) -> P:
+    """Spec for one K-leading cohort leaf (X/Y/n/keys/assignment state):
+    client axis sharded over the data axes, everything else replicated."""
+    return P(tuple(data_axes), *([None] * (ndim - 1)))
+
+
+def group_param_pspec(shape: tuple, model_size: int,
+                      model_axis: str = MP_AXIS) -> P:
+    """Spec for one m-stacked group-parameter leaf.
+
+    The leading (group) axis stays replicated — every device owns all m
+    group models, exactly like the 1-D path — and the *largest* trailing
+    dim divisible by ``model_size`` shards over "model" (the local solver's
+    parameter axis). No divisible dim, or ``model_size == 1``, degrades to
+    full replication: the 1-device and 1-D-mesh placements are the
+    ``model_size == 1`` special case.
+    """
+    nd = len(shape)
+    parts = [None] * nd
+    if model_size > 1 and nd >= 2:
+        best, best_dim = -1, -1
+        for i in range(1, nd):
+            if shape[i] % model_size == 0 and shape[i] > best:
+                best, best_dim = shape[i], i
+        if best_dim >= 0:
+            parts[best_dim] = model_axis
+    return P(*parts)
+
+
+def group_param_specs(group_params, mesh) -> object:
+    """Pytree of ``group_param_pspec`` for an m-stacked parameter pytree
+    under ``mesh`` (model-axis size read off the mesh; 1 when absent)."""
+    model_size = dict(mesh.shape).get(MP_AXIS, 1)
+    return jax.tree_util.tree_map(
+        lambda l: group_param_pspec(tuple(l.shape), model_size), group_params)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,75 @@
+"""Docs stay executable and unbroken (PR 4 satellites).
+
+Runs the same two checks as the ``docs`` gate entry
+(benchmarks/docs_check.py) under pytest: every doctest embedded in the
+documented module docstrings passes, and every repo path referenced from
+README.md / docs/*.md exists — so a renamed file or a stale example fails
+tier-1 before it fails CI.
+"""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import docs_check  # noqa: E402
+
+_REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+class TestDoctests:
+    def test_documented_modules_doctests_pass(self):
+        tested = docs_check.run_doctests()
+        assert set(tested) == set(docs_check.DOCUMENTED_MODULES)
+        # the docstrings actually carry executable examples
+        assert sum(tested.values()) >= 2
+
+    def test_doctest_failure_is_detected(self, monkeypatch):
+        """The checker reports failures instead of counting attempts."""
+        import types
+        bad = types.ModuleType("bad_doc_mod")
+        bad.__doc__ = ">>> 1 + 1\n3\n"
+        monkeypatch.setitem(sys.modules, "bad_doc_mod", bad)
+        monkeypatch.setattr(docs_check, "DOCUMENTED_MODULES",
+                            ("bad_doc_mod",))
+        with pytest.raises(RuntimeError, match="doctest failure"):
+            docs_check.run_doctests()
+
+
+class TestDocLinks:
+    def test_all_referenced_paths_exist(self):
+        links = docs_check.check_doc_links()
+        assert links["files"] == len(docs_check.DOC_FILES)
+        assert links["refs"] > 10           # the docs actually cross-link
+
+    def test_required_docs_exist(self):
+        for doc in ("README.md", "docs/architecture.md", "docs/scaling.md",
+                    "docs/benchmarks.md"):
+            assert os.path.exists(os.path.join(_REPO, doc)), doc
+
+    def test_reference_extraction(self):
+        md = ("see [the roadmap](ROADMAP.md) and `src/repro/fed/rounds.py`; "
+              "`fed/store.py` resolves under src/repro; prose like "
+              "`m=5/K=50` or `a + b` is not a path; `BENCH_*.json` globs.")
+        refs = docs_check.referenced_paths(md)
+        assert "ROADMAP.md" in refs
+        assert "src/repro/fed/rounds.py" in refs
+        assert "fed/store.py" in refs
+        assert "BENCH_*.json" in refs
+        assert not any("m=5" in r or "+" in r for r in refs)
+
+    def test_missing_reference_trips(self, tmp_path, monkeypatch):
+        doc = tmp_path / "README.md"
+        doc.write_text("points at `src/repro/fed/gone_forever.py`")
+        monkeypatch.setattr(docs_check, "_REPO", str(tmp_path))
+        monkeypatch.setattr(docs_check, "DOC_FILES", ("README.md",))
+        with pytest.raises(RuntimeError, match="gone_forever"):
+            docs_check.check_doc_links()
+
+    def test_readme_names_the_bench_files(self):
+        with open(os.path.join(_REPO, "README.md")) as f:
+            readme = f.read()
+        for bench in ("BENCH_round_exec.json", "BENCH_clustering.json",
+                      "BENCH_population.json"):
+            assert bench in readme, f"README must link {bench}"
