@@ -1,0 +1,109 @@
+"""Benchmark: scan-fused round blocks vs the per-round dispatch path.
+
+The PR-5 tentpole claims that at paper scale the wall clock of the
+per-round driver is dominated by dispatch + host-sync overhead (one
+executor dispatch, two scalar ``float()`` fetches, and an eval dispatch
+per round), not by the round math — and that staging B rounds into ONE
+``jax.lax.scan`` dispatch with a donated carry
+(``fed.rounds.make_block_executor``) removes it. This entry keeps that
+claim measured: a FedGroup trainer (m=5, K=50, every client pre-trained so
+no cold-start host events break the blocks) runs B=16 rounds
+
+  * per round  (``block_size=1`` — the PR-2 fused round, B dispatches +
+    B metric syncs + B grouped-eval dispatches), and
+  * blocked    (``block_size=16`` — one dispatch, metrics fetched once),
+
+interleaved (bench_io.interleaved_best), both through identical round
+math (tests/test_round_block.py proves bit-identity). The watched ratio
+``block_speedup`` = per-round time / blocked time (amortized per round;
+the acceptance floor is blocked <= 0.6x per-round, i.e. speedup >= 1.67).
+The donation win is recorded as ``steady_live_growth`` — the number of
+device buffers a steady-state block leaves behind (the carry updates in
+place instead of reallocating every round) — plus ``carry_mb``, the
+donated carry's size. Metrics append to BENCH_round_exec.json (one file
+for all round-executor perf); the >2x gate in benchmarks/run.py watches
+``block_speedup`` (schema + semantics: docs/benchmarks.md).
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+
+from benchmarks.bench_io import interleaved_best, record_run
+from repro.core.fedgroup import FedGroupTrainer
+from repro.data import generators as gen
+from repro.fed.engine import FedConfig
+from repro.models.paper_models import mclr
+
+
+def _make_trainer(data, dim, base, **kw):
+    return FedGroupTrainer(mclr(dim, 10), data, FedConfig(**base, **kw))
+
+
+def main(quick: bool = False, *, m: int = 5, K: int = 50, B: int = 16):
+    dim = 16
+    n_clients = 60 if quick else 100
+    # capped per-client sizes (the virtual generator's max_size) keep the
+    # padded solver loop at the paper-scale ~ms round the tentpole targets;
+    # mnist_like's power-law tail pads every client to its 400-sample max
+    # and the compute would drown the dispatch overhead this entry watches
+    data = gen.virtual_mnist_like(
+        seed=0, n_clients=n_clients, dim=dim, mean_size=15, min_size=8,
+        max_size=20).materialize()
+    # pre-train the whole population: membership is fully assigned after
+    # the group cold start, so no eq.-9 host events break the blocks and
+    # the timed region is pure round execution on both paths
+    base = dict(clients_per_round=K, local_epochs=1, batch_size=10,
+                lr=0.05, n_groups=m,
+                pretrain_scale=(n_clients + m - 1) // m, seed=0)
+    blocked = _make_trainer(data, dim, base, block_size=B)
+    per_round = _make_trainer(data, dim, base)
+    # warm-up: group cold start + both compiled programs
+    blocked.run(B)
+    per_round.run(B)
+
+    reps = 3 if quick else 6
+    block_us, round_us = interleaved_best(
+        [lambda: blocked.run(B), lambda: per_round.run(B)], reps=reps)
+
+    # donation win: a steady-state block must not grow the live-buffer set
+    # (the carry is donated and updated in place; without donation every
+    # block would leak a full copy of the m-stacked group state)
+    blocked.run(B)
+    live0 = len(jax.live_arrays())
+    blocked.run(B)
+    steady_live_growth = len(jax.live_arrays()) - live0
+    carry_mb = sum(l.nbytes for l in jax.tree_util.tree_leaves(
+        blocked._carry_in())) / 2**20
+
+    metrics = {"quick": quick, "m": m, "K": K, "B": B,
+               "n_clients": n_clients,
+               "block_us_per_round": block_us / B,
+               "per_round_us": round_us / B,
+               "block_speedup": round_us / max(block_us, 1e-9),
+               "steady_live_growth": steady_live_growth,
+               "carry_mb": round(carry_mb, 3)}
+    print(f"\n# Round blocks (m={m}, K={K}, B={B}): one scan dispatch vs "
+          f"{B} per-round dispatches")
+    print(f"  amortized per round: blocked "
+          f"{metrics['block_us_per_round']:.0f}us vs per-round "
+          f"{metrics['per_round_us']:.0f}us -> "
+          f"block_speedup={metrics['block_speedup']:.2f}x")
+    print(f"  donation: steady-state live-buffer growth "
+          f"{steady_live_growth:+d} arrays over a {carry_mb:.2f} MiB "
+          f"donated carry")
+    regression, details = record_run(
+        "BENCH_round_exec.json", metrics, watch=[("block_speedup", "min")])
+    if regression:
+        print("REGRESSION:", "; ".join(details),
+              "(gate semantics: docs/benchmarks.md)")
+    return {"block_speedup": round(metrics["block_speedup"], 2),
+            "steady_live_growth": steady_live_growth,
+            "regression": regression, "regression_details": details,
+            **metrics}
+
+
+if __name__ == "__main__":
+    sys.exit(0 if not main(quick="--quick" in sys.argv).get("regression")
+             else 1)

@@ -4,6 +4,9 @@
   table3     framework comparison + ablations  (paper Table 3)
   round_exec fused round executor vs the retired per-group loops
              (static + IFCA/FeSEM dynamic assignment, m=5/K=50)
+  round_block scan-fused B=16 round blocks (donated carry, one metrics
+             fetch per block) vs the per-round dispatch path, appended
+             to BENCH_round_exec.json
   mesh2d     2-D (data, model) mesh vs the 1-D data mesh round time
              (m=5/K=50, 4 forced host devices, appended to
              BENCH_round_exec.json)
@@ -22,16 +25,17 @@
 Exit status is nonzero when a bench fails OR when a bench reports a perf
 regression >2x against its committed BENCH_*.json baseline (cost watches
 the MADC dispatch's relative speed; round_exec the static/IFCA/FeSEM
-executor speedups; mesh2d the 2-D/1-D round-time ratio; population the
-streamed-vs-pinned round-time ratio and the prefetch-overlap speedup) —
+executor speedups; round_block the blocked-vs-per-round speedup; mesh2d
+the 2-D/1-D round-time ratio; population the streamed-vs-pinned
+round-time ratio and the prefetch-overlap speedup) —
 docs/benchmarks.md documents the BENCH_*.json schema and the gate
 semantics. Gate failures print a per-entry diff — which bench, crash vs
 watched-metric regression, best recorded -> measured — before the nonzero
-exit. ``--quick`` always includes the round_exec, mesh2d, population and
-docs suites, even under ``--only``:
+exit. ``--quick`` always includes the round_exec, round_block, mesh2d,
+population and docs suites, even under ``--only``:
 
 ``python -m benchmarks.run --quick --only cost,table3``  — the CI perf gate
-(effectively cost,table3,round_exec,mesh2d,population,docs)
+(effectively cost,table3,round_exec,round_block,mesh2d,population,docs)
 """
 from __future__ import annotations
 
@@ -45,12 +49,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import (clustering_cost, docs_check, eta_g_sweep,
                         fig5_edc_madc, mesh2d, population_bench, roofline,
-                        table1_heterogeneity, table3_frameworks)
+                        round_block, table1_heterogeneity, table3_frameworks)
 
 BENCHES = {
     "table1": table1_heterogeneity.main,
     "table3": table3_frameworks.main,
     "round_exec": table3_frameworks.round_executor_bench,
+    "round_block": round_block.main,
     "mesh2d": mesh2d.main,
     "population": population_bench.main,
     "docs": docs_check.main,
@@ -74,9 +79,10 @@ def main(argv=None) -> int:
 
     names = list(BENCHES) if not args.only else args.only.split(",")
     if args.quick:
-        # the CI gate must always exercise the round-executor, 2-D mesh
-        # and population (streamed cohort) suites, plus the docs check
-        for required in ("round_exec", "mesh2d", "population", "docs"):
+        # the CI gate must always exercise the round-executor, round-block,
+        # 2-D mesh and population (streamed cohort) suites + the docs check
+        for required in ("round_exec", "round_block", "mesh2d",
+                         "population", "docs"):
             if required not in names:
                 names.append(required)
     print("name,us_per_call,derived")

@@ -74,28 +74,33 @@ def hierarchical(proximity, k: int):
 
     proximity: (n, n) symmetric dissimilarity matrix (e.g. MADC).
     Returns integer labels (n,) with k clusters.
+
+    Merged-away rows/columns are masked to +inf in the full matrix and the
+    next pair is a single ``argmin(D)`` — no ``D[np.ix_(active, active)]``
+    submatrix copy (an extra O(n²) allocation per merge) and the linkage
+    update is one vectorized ``np.maximum`` row/column write. Tie-breaking
+    matches the submatrix version: masked entries are +inf, so row-major
+    ``argmin`` order over the full matrix is the submatrix's row-major
+    order (the active set stays ascending).
     """
     D = np.array(proximity, dtype=np.float64, copy=True)
     n = D.shape[0]
     np.fill_diagonal(D, np.inf)
-    active = list(range(n))
     members = {i: [i] for i in range(n)}
-    while len(active) > k:
-        sub = D[np.ix_(active, active)]
-        flat = np.argmin(sub)
-        ai, aj = np.unravel_index(flat, sub.shape)
-        i, j = active[ai], active[aj]
+    n_active = n
+    while n_active > k:
+        i, j = np.unravel_index(np.argmin(D), D.shape)
         if j < i:
             i, j = j, i
-        # complete linkage: distance to merged = max of distances
-        for other in active:
-            if other in (i, j):
-                continue
-            D[i, other] = D[other, i] = max(D[i, other], D[j, other])
+        # complete linkage: distance to merged = max of distances (masked
+        # entries stay +inf under max; the i-th diagonal is re-masked)
+        upd = np.maximum(D[i], D[j])
+        D[i, :] = D[:, i] = upd
+        D[i, i] = np.inf
+        D[j, :] = D[:, j] = np.inf
         members[i].extend(members.pop(j))
-        active.remove(j)
+        n_active -= 1
     labels = np.zeros(n, dtype=np.int32)
-    for lbl, root in enumerate(active):
-        for idx in members[root]:
-            labels[idx] = lbl
+    for lbl, root in enumerate(sorted(members)):
+        labels[members[root]] = lbl
     return labels

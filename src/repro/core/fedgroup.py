@@ -91,16 +91,21 @@ class FedGroupTrainer(GroupedTrainer):
             labels = self.rng.integers(0, self.m, n_pre)
             self._edc_info = None
         elif cfg.measure == "edc":
-            self.key, sk = jax.random.split(self.key)
-            E, V = measures.edc_embed(dW, self.m, key=sk)
-            assign, centers = cluster_lib.kmeans_pp(sk, E, self.m)
+            # distinct subkeys: reusing one key for both the randomized
+            # SVD's test matrix and the K-Means++ seeding correlates the
+            # embedding directions with the seeding draws
+            self.key, sk_svd, sk_km = jax.random.split(self.key, 3)
+            E, V = measures.edc_embed(dW, self.m, key=sk_svd)
+            assign, centers = cluster_lib.kmeans_pp(sk_km, E, self.m)
             labels = np.asarray(assign)
             self._edc_info = {"embedding": np.asarray(E),
                               "inertia": float(cluster_lib.kmeans_inertia(
                                   E, assign, centers))}
         elif cfg.measure == "madc":
             M = measures.cosine_similarity_matrix(dW)
-            Mp = measures.madc(M)
+            # blocked Pallas kernel above the measured crossover size,
+            # reference broadcast below it (kernels.ops.madc_crossover_n)
+            Mp = measures.madc(M, use_kernel=True)
             labels = cluster_lib.hierarchical(np.asarray(Mp), self.m)
             self._edc_info = None
         else:
@@ -151,13 +156,33 @@ class FedGroupTrainer(GroupedTrainer):
         self.membership[cold_idx] = np.asarray(jnp.argmin(dis, axis=1))
 
     # ------------------------------------------------------------------
+    # Round-block staging: blocks break on host events (Alg. 3 cold start,
+    # eq.-9 newcomers in a staged cohort) — membership is static otherwise
+    # ------------------------------------------------------------------
+    def _host_round_pre(self) -> bool:
+        return not self.cold_started
+
+    def _needs_host(self, idx) -> bool:
+        return bool((self.membership[idx] < 0).any())
+
+    def _carry_group_delta(self):
+        # set by group_cold_start — _host_round_pre keeps blocks from
+        # staging before it ran
+        return self.group_delta
+
+    def _carry_out(self, carry: dict):
+        super()._carry_out(carry)
+        self.group_delta = carry["group_delta"]
+
+    # ------------------------------------------------------------------
     # Round (Algorithm 2) — one fused dispatch over all groups
     # ------------------------------------------------------------------
-    def round(self, t: int) -> RoundMetrics:
+    def round(self, t: int, idx=None) -> RoundMetrics:
         if not self.cold_started:
             self.group_cold_start()
 
-        idx = self._select()
+        if idx is None:
+            idx = self._select()
         cold = idx[self.membership[idx] < 0]
         self.last_cold = len(cold)
         # cold start: 1 global model down + 1 pretrain update up per newcomer
@@ -177,7 +202,7 @@ class FedGroupTrainer(GroupedTrainer):
         # auxiliary global model: unweighted average of group models
         self.params = out.global_params
 
-        acc = self.evaluate_groups()
+        acc = self._round_eval(t)
         m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy))
         self.history.add(m)
         return m

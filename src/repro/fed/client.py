@@ -69,14 +69,51 @@ def make_batch_solver(model: ModelSpec, *, epochs: int, batch_size: int,
     return jax.jit(jax.vmap(solve, in_axes=(None, 0, 0, 0, 0)))
 
 
-def make_eval_fn(model: ModelSpec):
-    """correct_counts(params, X (K,max_n,...), Y, n) -> (correct (K,), n)."""
+def _correct_one(model: ModelSpec):
+    """Per-client correct-prediction count (params, x, y, n_valid) -> int32."""
     def one(params, x, y, n_valid):
         logits = model.apply(params, x)
         pred = jnp.argmax(logits, -1)
         ok = (pred == y) & (jnp.arange(y.shape[0]) < n_valid)
         return jnp.sum(ok)
-    return jax.jit(jax.vmap(one, in_axes=(None, 0, 0, 0)))
+    return one
+
+
+def make_eval_fn(model: ModelSpec):
+    """correct_counts(params, X (K,max_n,...), Y, n) -> (correct (K,), n)."""
+    return jax.jit(jax.vmap(_correct_one(model), in_axes=(None, 0, 0, 0)))
+
+
+def grouped_eval_correct(model: ModelSpec):
+    """Un-jitted fused grouped-eval core: ONE program for all m groups.
+
+    fn(group_params, membership, Xt, Yt, nt) -> (correct, total) int32
+    scalars. group_params is the m-stacked pytree; membership (N,) routes
+    each client's test shard to its group's model (-1 = never assigned,
+    excluded from both counts) — the paper's §5.1 weighted accuracy as a
+    single dispatch regardless of m, replacing the per-group eval loop
+    (m dispatches + host accumulation). Each client gathers its own
+    group's parameters (``g[membership]``, the round core's idiom) and is
+    scored once — N forward passes total, same FLOPs as the retired loop,
+    not m·N; the sums stay integer, so the host-side accuracy division is
+    bit-identical to the retired loop's. Jit it at the call site (the
+    trainers do); ``fed.rounds.make_block_executor`` runs it inside the
+    scanned block at the ``eval_every`` cadence.
+    """
+    one = _correct_one(model)
+
+    def fn(group_params, membership, Xt, Yt, nt):
+        membership = membership.astype(jnp.int32)
+        valid = membership >= 0
+        m = jax.tree_util.tree_leaves(group_params)[0].shape[0]
+        mem = jnp.clip(membership, 0, m - 1)
+        my_params = jax.tree_util.tree_map(lambda g: g[mem], group_params)
+        per_client = jax.vmap(one)(my_params, Xt, Yt, nt)   # (N,) int32
+        correct = jnp.sum(jnp.where(valid, per_client, 0))
+        total = jnp.sum(jnp.where(valid, nt.astype(jnp.int32), 0))
+        return correct, total
+
+    return fn
 
 
 def client_mean_loss(model: ModelSpec):

@@ -21,10 +21,24 @@ Cohort *selection* draws from a
 dedicated ``select_rng`` stream (distinct from the cold-start/ablation
 ``rng``), so a same-seed streamed population reproduces the pinned
 trainer's selection sequence exactly.
+
+``FedConfig.block_size > 1`` turns on *round-block execution* on the
+pinned path: ``run()`` stages up to ``block_size`` upcoming cohorts (+
+keys + zero-weight dropout padding) on the host — selection never depends
+on device results — and dispatches them as ONE scan-fused program
+(``fed.rounds.make_block_executor``) with the group state carried and
+*donated* across rounds, fetching the stacked per-round metrics once per
+block. Blocks break back to the per-round path on anything that needs the
+host between rounds: group cold start, cold newcomers in a staged cohort,
+or a streamed population (whose arrivals must be observed round by
+round). ``FedConfig.eval_every`` sets the evaluation cadence on both
+paths (1 = every round, the paper's tables; skipped rounds record NaN
+accuracy, which ``History`` ignores).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass, field
 
 import jax
@@ -58,6 +72,10 @@ class FedConfig:
     svd_iters: int = 4
     dropout_rate: float = 0.0            # per-round client drop probability
                                          # (network jitter, paper §3.3)
+    eval_every: int = 1                  # evaluate every e-th round (1 =
+                                         # every round, the paper's tables)
+    block_size: int = 1                  # rounds fused per scan dispatch on
+                                         # the pinned path (1 = per-round)
 
 
 @dataclass
@@ -70,6 +88,10 @@ class RoundMetrics:
 
 @dataclass
 class History:
+    """Per-round metrics. Rounds skipped by the ``eval_every`` cadence
+    record ``weighted_acc = nan``; the aggregates below ignore them (a NaN
+    never satisfies ``>=``, and ``max_acc`` filters it explicitly)."""
+
     rounds: list = field(default_factory=list)
 
     def add(self, m: RoundMetrics):
@@ -77,7 +99,8 @@ class History:
 
     @property
     def max_acc(self) -> float:
-        return max((r.weighted_acc for r in self.rounds), default=0.0)
+        return max((r.weighted_acc for r in self.rounds
+                    if not math.isnan(r.weighted_acc)), default=0.0)
 
     def rounds_to_reach(self, target: float):
         for r in self.rounds:
@@ -123,6 +146,9 @@ class FedAvgTrainer:
         self.model_size = param_count(self.params)
         self.comm_params = 0        # cumulative parameters transferred
         self._round_exec = None     # lazily-built single-dispatch round
+        self._block_exec = None     # lazily-built scan-fused round block
+        self._grouped_eval = None   # lazily-jitted fused grouped eval
+        self._eval_zero_mem = None  # (N,) zeros for the consensus eval
         # client axis sharded over "data" on multi-device (None = plain
         # jit); REPRO_MODEL_AXIS>1 auto-builds the 2-D (data, model) mesh
         self.mesh = parallel_lib.default_fed_mesh() if mesh is None else mesh
@@ -155,6 +181,113 @@ class FedAvgTrainer:
             self._round_exec = parallel_lib.make_sharded_executor(
                 fn, self.mesh)
         return self._round_exec
+
+    # -- scan-fused round blocks -------------------------------------------
+    def _block_kwargs(self) -> dict:
+        """make_block_executor extras: the executor grouping plus the
+        framework's carry<->assignment-state adapters (FeSEM overrides)."""
+        return dict(self._exec_spec())
+
+    def _block_executor(self):
+        if self._block_exec is None:
+            cfg = self.cfg
+            fn = rounds_lib.make_block_executor(
+                self.model, epochs=cfg.local_epochs,
+                batch_size=cfg.batch_size, lr=cfg.lr, mu=cfg.mu,
+                max_samples=self._max_samples, **self._block_kwargs())
+            self._block_exec = parallel_lib.make_sharded_block_executor(
+                fn, self.mesh)
+        return self._block_exec
+
+    def _host_round_pre(self) -> bool:
+        """True when the NEXT round must run on the per-round path for
+        host work that precedes selection (FedGroup: group cold start)."""
+        return False
+
+    def _needs_host(self, idx) -> bool:
+        """True when the selected cohort needs host work before the round
+        (FedGroup: cold newcomers routed through eq.-9)."""
+        return False
+
+    def _stage_comm(self, k: int):
+        """Per-staged-round communication accounting (k = alive clients)."""
+        self.comm_params += 2 * k * self.model_size
+
+    def _stage_round(self, t: int, idx):
+        """One staged round: cohort ids padded to K, solver keys (the
+        alive prefix draws ``split(sk, k)`` — exactly the per-round draw),
+        the zero-weight alive mask, and the eval-cadence flag."""
+        K = min(self.cfg.clients_per_round, self.n_clients)
+        self.key, sk = jax.random.split(self.key)
+        k = len(idx)
+        keys = np.asarray(jax.random.split(sk, k))
+        idx = np.asarray(idx, np.int32)
+        if k < K:
+            idx = np.concatenate([idx, np.full(K - k, idx[0], np.int32)])
+            keys = np.concatenate(
+                [keys, np.zeros((K - k,) + keys.shape[1:], keys.dtype)])
+        alive = np.zeros(K, np.float32)
+        alive[:k] = 1.0
+        self._stage_comm(k)
+        return idx, keys, alive, self._should_eval(t)
+
+    def _stage_block(self, t0: int, max_b: int):
+        """Stage up to ``max_b`` upcoming rounds (selection + keys never
+        depend on device results). Stops at the first round that needs the
+        host; a cohort already drawn for that round is returned as
+        ``pending`` so the per-round fallback consumes it without
+        re-drawing (the rng streams stay identical to a per-round run)."""
+        staged, pending = [], None
+        for b in range(max_b):
+            if self._host_round_pre():
+                break
+            idx = self._select()
+            if self._needs_host(idx):
+                pending = idx
+                break
+            staged.append(self._stage_round(t0 + b, idx))
+        return staged, pending
+
+    # carry construction/teardown — overridden down the trainer hierarchy
+    def _membership_host(self):
+        return np.zeros(self.n_clients, np.int64)    # consensus: one group
+
+    def _stacked_group_params(self):
+        return jax.tree_util.tree_map(lambda p: p[None], self.params)
+
+    def _carry_group_delta(self):
+        m = self._exec_spec()["n_groups"]
+        return jnp.zeros((m, self.model_size), jnp.float32)
+
+    def _carry_aux(self):
+        return None
+
+    def _carry_in(self) -> dict:
+        mem = np.append(self._membership_host(), -1).astype(np.int32)
+        return dict(group_params=self._stacked_group_params(),
+                    global_params=self.params,
+                    group_delta=self._carry_group_delta(),
+                    membership=jnp.asarray(mem), aux=self._carry_aux())
+
+    def _carry_out(self, carry: dict):
+        self.params = carry["global_params"]
+
+    def _run_block(self, t0: int, staged):
+        idx = jnp.asarray(np.stack([s[0] for s in staged]))
+        keys = jnp.asarray(np.stack([s[1] for s in staged]))
+        alive = jnp.asarray(np.stack([s[2] for s in staged]))
+        do_eval = np.asarray([s[3] for s in staged], bool)
+        carry, ys = self._block_executor()(
+            self._carry_in(), self._train_stack, self._test_stack,
+            idx, keys, alive, jnp.asarray(do_eval))
+        self._carry_out(carry)
+        # ONE device fetch for the whole block's stacked metrics
+        mean_loss, disc, correct, total = (np.asarray(v) for v in ys)
+        for b in range(len(staged)):
+            acc = (int(correct[b]) / max(int(total[b]), 1)
+                   if do_eval[b] else float("nan"))
+            self.history.add(RoundMetrics(t0 + b, acc, float(mean_loss[b]),
+                                          float(disc[b])))
 
     # -- helpers -----------------------------------------------------------
     def _select(self):
@@ -203,6 +336,41 @@ class FedAvgTrainer:
             total += int(np.sum(np.asarray(n)))
         return correct, total
 
+    def _should_eval(self, t: int) -> bool:
+        e = self.cfg.eval_every
+        return e <= 1 or (t + 1) % e == 0
+
+    def _grouped_eval_fn(self):
+        if self._grouped_eval is None:
+            self._grouped_eval = jax.jit(
+                client_lib.grouped_eval_correct(self.model))
+        return self._grouped_eval
+
+    def _fused_eval_acc(self, group_params, membership) -> float:
+        """Pinned-path weighted accuracy as ONE dispatch regardless of m:
+        integer correct/total counts from the fused grouped eval, divided
+        on the host (the same division the block executor's stacked
+        counts go through — bit-identical metrics)."""
+        xt, yt, nt = self._test_stack
+        c, tot = self._grouped_eval_fn()(group_params, membership,
+                                         xt, yt, nt)
+        return int(c) / max(int(tot), 1)
+
+    def _round_eval(self, t: int) -> float:
+        """The per-round training loop's evaluation hook (NaN off-cadence).
+        The pinned consensus path goes through the fused grouped eval with
+        m=1 so the per-round and block-executor paths run the identical
+        eval program."""
+        if not self._should_eval(t):
+            return float("nan")
+        if self.population is not None:
+            return self.evaluate()
+        if self._eval_zero_mem is None:
+            self._eval_zero_mem = jnp.zeros(self.n_clients, jnp.int32)
+        return self._fused_eval_acc(
+            jax.tree_util.tree_map(lambda p: p[None], self.params),
+            self._eval_zero_mem)
+
     def evaluate(self, params=None, client_idx=None) -> float:
         params = self.params if params is None else params
         if self.population is not None:
@@ -223,8 +391,9 @@ class FedAvgTrainer:
         return float(np.sum(np.asarray(correct)) / max(total, 1))
 
     # -- main loop ---------------------------------------------------------
-    def round(self, t: int) -> RoundMetrics:
-        idx = self._select()
+    def round(self, t: int, idx=None) -> RoundMetrics:
+        if idx is None:
+            idx = self._select()
         x, y, n = self._client_batch(idx)
         self.key, sk = jax.random.split(self.key)
         keys = jax.random.split(sk, len(idx))
@@ -234,14 +403,41 @@ class FedAvgTrainer:
             jax.tree_util.tree_map(lambda p: p[None], self.params),
             jnp.zeros(len(idx), jnp.int32), x, y, n, keys)
         self.params = out.global_params
-        acc = self.evaluate()
+        acc = self._round_eval(t)
         m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy))
         self.history.add(m)
         return m
 
     def run(self, n_rounds=None) -> History:
-        for t in range(n_rounds or self.cfg.n_rounds):
-            self.round(t)
+        """The block-scheduling loop. With ``block_size > 1`` on the pinned
+        path, upcoming rounds are staged on the host and dispatched as one
+        scan-fused block; anything that needs the host between rounds —
+        group cold start, cold newcomers in a staged cohort, a streamed
+        population — breaks back to the per-round path (a cohort already
+        drawn for the breaking round is carried over as ``pending``, so
+        the rng streams match a pure per-round run exactly)."""
+        total = n_rounds or self.cfg.n_rounds
+        blocks = self.cfg.block_size > 1 and (
+            self.population is None or
+            getattr(self.population, "block_stageable", False))
+        t, pending = 0, None
+        while t < total:
+            if pending is not None:
+                self.round(t, idx=pending)
+                pending = None
+                t += 1
+            elif not blocks or total - t < 2:
+                self.round(t)
+                t += 1
+            else:
+                staged, pending = self._stage_block(
+                    t, min(self.cfg.block_size, total - t))
+                if staged:
+                    self._run_block(t, staged)
+                    t += len(staged)
+                elif pending is None:
+                    self.round(t)
+                    t += 1
         return self.history
 
     def close(self):
@@ -282,7 +478,11 @@ class GroupedTrainer(FedAvgTrainer):
 
     def evaluate_groups(self) -> float:
         """Weighted accuracy: each group model on the test data of all
-        clients historically assigned to it (paper §5.1 metric)."""
+        clients historically assigned to it (paper §5.1 metric). On the
+        pinned path this is ONE fused dispatch regardless of m
+        (``fed.client.grouped_eval_correct``); the streamed population
+        keeps the per-group blocked eval loop (it cannot pin the test
+        stacks)."""
         if self.population is not None:
             eval_ids = self.population.eval_ids()
             mem = self.membership[eval_ids]
@@ -295,15 +495,23 @@ class GroupedTrainer(FedAvgTrainer):
                 total_correct += c
                 total_n += tot
             return total_correct / max(total_n, 1)
-        total_correct, total_n = 0, 0
-        xt, yt, nt = self._test_stack
-        for j in range(self.m):
-            members = np.where(self.membership == j)[0]
-            if len(members) == 0:
-                continue
-            sel = jnp.asarray(members.astype(np.int32))
-            correct = self.eval_fn(self.group_param(j), xt[sel], yt[sel],
-                                   nt[sel])
-            total_correct += int(np.sum(np.asarray(correct)))
-            total_n += int(self.data.n_test[members].sum())
-        return total_correct / max(total_n, 1)
+        return self._fused_eval_acc(
+            self.group_params, jnp.asarray(self.membership.astype(np.int32)))
+
+    def _round_eval(self, t: int) -> float:
+        if not self._should_eval(t):
+            return float("nan")
+        return self.evaluate_groups()
+
+    # -- round-block carry: m-stacked groups + membership ------------------
+    def _membership_host(self):
+        return self.membership
+
+    def _stacked_group_params(self):
+        return self.group_params
+
+    def _carry_out(self, carry: dict):
+        self.params = carry["global_params"]
+        self.group_params = carry["group_params"]
+        self.membership[:] = np.asarray(
+            carry["membership"])[:-1].astype(self.membership.dtype)

@@ -86,8 +86,28 @@ class FeSEMTrainer(GroupedTrainer):
                 "assign_fn": make_fesem_assign(),
                 "state_update_fn": fesem_state_update}
 
-    def round(self, t: int) -> RoundMetrics:
-        idx = self._select()
+    # -- round-block carry: the (N, d_w) local-model matrix rides along ----
+    def _block_kwargs(self) -> dict:
+        kw = dict(self._exec_spec())
+        # per-step E-step state from the carried matrix (idx already
+        # redirected to the trash row for zero-weight padded lanes), and
+        # the updated matrix back out of the M-step scatter
+        kw["make_state"] = lambda aux, idx: {"local_flat": aux, "idx": idx}
+        kw["state_to_aux"] = lambda st: st["local_flat"]
+        return kw
+
+    def _carry_aux(self):
+        d_w = self.local_flat.shape[1]
+        return jnp.concatenate(
+            [self.local_flat, jnp.zeros((1, d_w), self.local_flat.dtype)])
+
+    def _carry_out(self, carry: dict):
+        super()._carry_out(carry)
+        self.local_flat = carry["aux"][:-1]
+
+    def round(self, t: int, idx=None) -> RoundMetrics:
+        if idx is None:
+            idx = self._select()
         # FeSEM: server-side E-step, then 1 center down + 1 model up
         self.comm_params += 2 * len(idx) * self.model_size
         x, y, n = self._client_batch(idx)
@@ -115,7 +135,7 @@ class FeSEMTrainer(GroupedTrainer):
         else:
             self.local_flat = out.assign_state["local_flat"]
         self.membership[idx] = np.asarray(out.membership)
-        acc = self.evaluate_groups()
+        acc = self._round_eval(t)
         m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy))
         self.history.add(m)
         return m

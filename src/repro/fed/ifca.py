@@ -59,8 +59,13 @@ class IFCATrainer(GroupedTrainer):
         return {"n_groups": self.m, "eta_g": 0.0,
                 "assign_fn": make_ifca_assign(self.model)}
 
-    def round(self, t: int) -> RoundMetrics:
-        idx = self._select()
+    def _stage_comm(self, k: int):
+        # the m× broadcast accounting is per ALIVE client, block or not
+        self.comm_params += (self.m + 1) * k * self.model_size
+
+    def round(self, t: int, idx=None) -> RoundMetrics:
+        if idx is None:
+            idx = self._select()
         # IFCA broadcasts ALL m cluster models to every selected client
         self.comm_params += (self.m + 1) * len(idx) * self.model_size
         x, y, n = self._client_batch(idx)
@@ -71,7 +76,7 @@ class IFCATrainer(GroupedTrainer):
         # persists into the population state table when streaming (the
         # trainer's membership array IS the table's column)
         self.membership[idx] = np.asarray(out.membership)
-        acc = self.evaluate_groups()
+        acc = self._round_eval(t)
         m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy))
         self.history.add(m)
         return m

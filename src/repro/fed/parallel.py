@@ -46,8 +46,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.modules import flatten_updates
-from repro.sharding.specs import (MP_AXIS, cohort_pspec, data_axis_names,
-                                  group_param_pspec)
+from repro.sharding.specs import (MP_AXIS, block_staged_pspec, cohort_pspec,
+                                  data_axis_names, group_param_pspec)
 
 
 # ---------------------------------------------------------------------------
@@ -200,6 +200,64 @@ def make_sharded_executor(round_fn, mesh=None):
         assign, X, Y, n, keys = (shard_client_axis(mesh, t)
                                  for t in (assign, X, Y, n, keys))
         return jfn(group_params, assign, X, Y, n, keys)
+
+    return call
+
+
+def make_sharded_block_executor(block_fn, mesh=None):
+    """jit ``block_fn`` (a ``fed.rounds.make_block_executor`` product) with
+    the round-to-round carry DONATED and, on a mesh, the same placement as
+    the per-round executor.
+
+    ``donate_argnums=(0,)`` hands the carry's buffers (m-stacked group
+    params, membership, FeSEM local_flat) back to XLA, so B rounds of group
+    state update in place instead of reallocating every block — the
+    steady-state device allocation win the ``round_block`` bench records.
+
+    mesh=None (single device) is the plain donating-jit special case. With
+    a mesh, the carry's m-stacked group params follow
+    ``sharding.specs.group_param_pspec`` (replicated at model-axis 1), the
+    pinned train/test stacks shard their leading (client) axis over the
+    data axes when divisible (``shard_client_axis``), and the staged
+    ``(B, K, ...)`` tensors shard their *client* axis — axis 1, the scan
+    consumes axis 0 — per ``sharding.specs.block_staged_pspec``. The rest
+    of the carry (membership, aux, deltas) replicates: it is O(N + m·d_w),
+    gathered/scattered by client id in-program.
+    """
+    jfn = jax.jit(block_fn, donate_argnums=(0,))
+    if mesh is None:
+        return jfn
+    model_size = dict(mesh.shape).get(MP_AXIS, 1)
+    axes = data_axis_names(mesh)
+    total = mesh_data_shards(mesh)
+    replicate = lambda t: jax.tree_util.tree_map(
+        lambda l: jax.device_put(jnp.asarray(l), NamedSharding(
+            mesh, P(*([None] * jnp.ndim(l))))), t)
+    place_groups = lambda t: jax.tree_util.tree_map(
+        lambda l: jax.device_put(l, NamedSharding(
+            mesh, group_param_pspec(jnp.shape(l), model_size))), t)
+
+    def place_staged(leaf):
+        leaf = jnp.asarray(leaf)
+        if leaf.ndim >= 2 and leaf.shape[1] % total == 0 and leaf.shape[1]:
+            spec = block_staged_pspec(leaf.ndim, data_axes=axes)
+        else:
+            spec = P(*([None] * leaf.ndim))
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    def call(carry, train_stack, test_stack, idx, keys, alive, do_eval):
+        carry = dict(carry,
+                     group_params=place_groups(carry["group_params"]),
+                     global_params=place_groups(carry["global_params"]),
+                     group_delta=replicate(carry["group_delta"]),
+                     membership=replicate(carry["membership"]),
+                     aux=replicate(carry["aux"]))
+        train_stack = shard_client_axis(mesh, train_stack)
+        test_stack = shard_client_axis(mesh, test_stack)
+        idx, keys, alive = (jax.tree_util.tree_map(place_staged, t)
+                            for t in (idx, keys, alive))
+        return jfn(carry, train_stack, test_stack, idx, keys, alive,
+                   replicate(do_eval))
 
     return call
 

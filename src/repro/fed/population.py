@@ -271,6 +271,14 @@ class Population:
     prefetch thread starts on the first ``next_cohort``.
     """
 
+    # Streamed populations never fuse into round blocks
+    # (``FedConfig.block_size``): the arrival process and the cohort
+    # prefetcher must be observed by the host between rounds (newcomer
+    # activation feeds eq.-9 cold start round by round), so ``engine.run``
+    # falls back to the per-round path whenever a population is attached —
+    # the "population streaming" block-break event.
+    block_stageable = False
+
     def __init__(self, store: ClientStore, cfg: PopulationConfig | None = None):
         self.store = store
         self.cfg = cfg or PopulationConfig()

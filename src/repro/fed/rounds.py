@@ -30,6 +30,21 @@ are all fused into the same program, so
 — one compiled round instead of the seed's ``m`` solver launches plus a
 dozen host-synchronizing aggregation dispatches per round.
 
+``make_block_executor`` goes one step further: it wraps the same fused
+round in a ``jax.lax.scan`` over B rounds, so B rounds cost ONE dispatch.
+Host-side cohort selection never depends on device results, so the trainer
+stages a ``(B, K)`` cohort index matrix, ``(B, K, 2)`` solver keys and a
+``(B, K)`` zero-weight ``alive`` mask (``dropout_rate`` cohorts pad to K so
+the scan shapes stay static) up front; client batches are gathered
+in-program from the pinned stacks, the carry (m-stacked group params +
+each framework's assignment state) is *donated* so group state updates in
+place, and per-round metrics — including the fused grouped eval — come
+back stacked ``(B,)`` and are fetched once per block. The per-round
+``make_round_executor`` path survives unchanged as the equivalence oracle
+and the streamed-population fallback (``fed.engine.run`` breaks blocks on
+events that need the host: group cold start, cold newcomers in a cohort,
+population streaming).
+
 ``serial_reference_round`` keeps the seed per-group loop alive as the
 equivalence oracle for tests and the BENCH_round_exec baseline;
 ``serial_ifca_round`` / ``serial_fesem_round`` do the same for the retired
@@ -72,35 +87,24 @@ def _group_norms(stacked, m):
     return jnp.sqrt(sq)
 
 
-def make_round_executor(model, *, epochs: int, batch_size: int, lr: float,
-                        mu: float, n_groups: int, max_samples: int,
-                        eta_g: float = 0.0, assign_fn=None,
-                        state_update_fn=None):
-    """Returns round_fn(group_params, membership, X, Y, n, keys) -> RoundOutput.
-
-    group_params: pytree with leading axis m; membership: (K,) int group id
-    per selected client; X: (K, max_n, ...); Y: (K, max_n); n: (K,);
-    keys: (K, 2) uint32. Pure function of arrays — jit/pjit it at the call
-    site (the trainers jit it; the mesh dry-run lowers it under pjit).
-
-    Dynamic assignment (IFCA / FeSEM): pass
-      assign_fn(group_params, X, Y, n, state) -> (K,) int membership
-    and the second positional argument of round_fn becomes the opaque
-    assignment *state* pytree instead of a membership vector — the cluster
-    estimate is computed inside the compiled round and fed straight into the
-    gather/segment-sum. An optional
-      state_update_fn(state, membership, deltas, finals) -> new state
-    keeps per-client state (e.g. FeSEM's flattened local models) on device
-    across rounds via an in-program scatter; the updated state is returned
-    in ``RoundOutput.assign_state``.
-    """
+def _make_round_core(model, *, epochs: int, batch_size: int, lr: float,
+                     mu: float, n_groups: int, max_samples: int,
+                     eta_g: float = 0.0, assign_fn=None,
+                     state_update_fn=None):
+    """The fused round as a pure function with an explicit per-client
+    ``alive`` weight — shared by ``make_round_executor`` (alive = ones) and
+    ``make_block_executor`` (alive = the staged zero-weight padding mask,
+    so ``dropout_rate`` cohorts keep static scan shapes). A client with
+    ``alive == 0`` still runs the vmapped solver (dead lanes are cheaper
+    than dynamic shapes) but contributes nothing to the aggregation, the
+    mean loss, or the discrepancy."""
     m = n_groups
     solve = client_lib.make_local_solver(
         model, epochs=epochs, batch_size=batch_size, lr=lr, mu=mu,
         max_samples=max_samples)
     loss_one = client_lib.client_mean_loss(model)
 
-    def round_fn(group_params, membership, X, Y, n, keys) -> RoundOutput:
+    def core(group_params, membership, X, Y, n, keys, alive) -> RoundOutput:
         state = None
         if assign_fn is not None:
             state = membership
@@ -114,7 +118,7 @@ def make_round_executor(model, *, epochs: int, batch_size: int, lr: float,
         # intra-group FedAvg (Alg. 2): segment-sum with n_i weights
         # normalized within each group
         onehot = jax.nn.one_hot(membership, m, dtype=jnp.float32)  # (K, m)
-        w = n.astype(jnp.float32)
+        w = n.astype(jnp.float32) * alive
         group_tot = onehot.T @ w                                   # (m,)
         norm_w = w[:, None] * onehot / jnp.maximum(group_tot[None], 1e-9)
 
@@ -140,7 +144,8 @@ def make_round_executor(model, *, epochs: int, batch_size: int, lr: float,
         disc_sq = sum(jnp.sum(jnp.square((f - t).reshape(K, -1)), axis=1)
                       for f, t in zip(jax.tree_util.tree_leaves(finals),
                                       jax.tree_util.tree_leaves(tilde_mine)))
-        discrepancy = jnp.mean(jnp.sqrt(disc_sq))
+        discrepancy = jnp.sum(jnp.sqrt(disc_sq) * alive) / \
+            jnp.maximum(jnp.sum(alive), 1e-9)
 
         # inter-group aggregation (Alg. 2 lines 17-19), stacked form
         if eta_g > 0.0 and m > 1:
@@ -165,7 +170,122 @@ def make_round_executor(model, *, epochs: int, batch_size: int, lr: float,
                            group_delta_flat, discrepancy, membership, state,
                            mean_loss)
 
+    return core
+
+
+def make_round_executor(model, *, epochs: int, batch_size: int, lr: float,
+                        mu: float, n_groups: int, max_samples: int,
+                        eta_g: float = 0.0, assign_fn=None,
+                        state_update_fn=None):
+    """Returns round_fn(group_params, membership, X, Y, n, keys) -> RoundOutput.
+
+    group_params: pytree with leading axis m; membership: (K,) int group id
+    per selected client; X: (K, max_n, ...); Y: (K, max_n); n: (K,);
+    keys: (K, 2) uint32. Pure function of arrays — jit/pjit it at the call
+    site (the trainers jit it; the mesh dry-run lowers it under pjit).
+
+    Dynamic assignment (IFCA / FeSEM): pass
+      assign_fn(group_params, X, Y, n, state) -> (K,) int membership
+    and the second positional argument of round_fn becomes the opaque
+    assignment *state* pytree instead of a membership vector — the cluster
+    estimate is computed inside the compiled round and fed straight into the
+    gather/segment-sum. An optional
+      state_update_fn(state, membership, deltas, finals) -> new state
+    keeps per-client state (e.g. FeSEM's flattened local models) on device
+    across rounds via an in-program scatter; the updated state is returned
+    in ``RoundOutput.assign_state``.
+    """
+    core = _make_round_core(
+        model, epochs=epochs, batch_size=batch_size, lr=lr, mu=mu,
+        n_groups=n_groups, max_samples=max_samples, eta_g=eta_g,
+        assign_fn=assign_fn, state_update_fn=state_update_fn)
+
+    def round_fn(group_params, membership, X, Y, n, keys) -> RoundOutput:
+        return core(group_params, membership, X, Y, n, keys,
+                    jnp.ones(n.shape[0], jnp.float32))
+
     return round_fn
+
+
+def make_block_executor(model, *, epochs: int, batch_size: int, lr: float,
+                        mu: float, n_groups: int, max_samples: int,
+                        eta_g: float = 0.0, assign_fn=None,
+                        state_update_fn=None, make_state=None,
+                        state_to_aux=None):
+    """Returns block_fn(carry, train_stack, test_stack, idx, keys, alive,
+    do_eval) -> (carry, (mean_loss, discrepancy, correct, total)) — B fused
+    rounds as ONE ``jax.lax.scan`` dispatch over the pinned stacks.
+
+    carry (the donated round-to-round state):
+      ``group_params``  m-stacked pytree, updated in place round to round
+      ``global_params`` auxiliary global model (mean of groups)
+      ``group_delta``   (m, d_w) latest flattened update directions (eq. 9)
+      ``membership``    (N+1,) int32 — every client's group id (-1 = cold),
+                        row N is the scatter trash row for padded clients
+      ``aux``           framework state (FeSEM: (N+1, d_w) local_flat with
+                        the same trash row) or None
+
+    train_stack / test_stack: the pinned ``(x, y, n)`` device stacks —
+    client batches are gathered *in-program* (``X[idx]``), so no per-round
+    H2D. idx: (B, K) int32 staged cohorts; keys: (B, K, 2) uint32; alive:
+    (B, K) float32 zero-weight padding mask (``dropout_rate`` survivors
+    first, padding after — padded lanes aggregate with weight 0 and scatter
+    to the trash row); do_eval: (B,) bool eval-cadence mask
+    (``FedConfig.eval_every``). Per-round metrics come back stacked (B,):
+    mean_loss, discrepancy, and the fused grouped-eval correct/total counts
+    (0 where do_eval is False) — ints, so the host-side accuracy division
+    reproduces the per-round path bit for bit.
+
+    make_state(aux, idx) builds the per-round assignment state from the
+    carried ``aux`` (FeSEM: {"local_flat": aux, "idx": idx}); state_to_aux
+    extracts the updated aux from ``RoundOutput.assign_state``. With
+    ``assign_fn`` but no ``make_state`` the state is None (IFCA); without
+    ``assign_fn`` membership is gathered from the carry (static frameworks).
+
+    jit with ``donate_argnums=(0,)`` (``fed.parallel
+    .make_sharded_block_executor`` does) so the carry buffers are reused
+    instead of reallocated every block.
+    """
+    core = _make_round_core(
+        model, epochs=epochs, batch_size=batch_size, lr=lr, mu=mu,
+        n_groups=n_groups, max_samples=max_samples, eta_g=eta_g,
+        assign_fn=assign_fn, state_update_fn=state_update_fn)
+    eval_correct = client_lib.grouped_eval_correct(model)
+
+    def block_fn(carry, train_stack, test_stack, idx, keys, alive, do_eval):
+        X_all, Y_all, n_all = train_stack
+        Xt, Yt, nt = test_stack
+
+        def step(c, xs):
+            ix, ks, al, ev = xs
+            x, y, n = X_all[ix], Y_all[ix], n_all[ix]
+            trash = c["membership"].shape[0] - 1       # row N: padded lanes
+            ix_eff = jnp.where(al > 0, ix, trash).astype(jnp.int32)
+            if assign_fn is None:
+                arg = c["membership"][ix]
+            elif make_state is not None:
+                arg = make_state(c["aux"], ix_eff)
+            else:
+                arg = None
+            out = core(c["group_params"], arg, x, y, n, ks, al)
+            membership = c["membership"].at[ix_eff].set(out.membership)
+            aux = c["aux"]
+            if state_to_aux is not None:
+                aux = state_to_aux(out.assign_state)
+            new_c = dict(group_params=out.group_params,
+                         global_params=out.global_params,
+                         group_delta=out.group_delta_flat,
+                         membership=membership, aux=aux)
+            correct, total = jax.lax.cond(
+                ev,
+                lambda gp, mem: eval_correct(gp, mem[:-1], Xt, Yt, nt),
+                lambda gp, mem: (jnp.int32(0), jnp.int32(0)),
+                out.group_params, membership)
+            return new_c, (out.mean_loss, out.discrepancy, correct, total)
+
+        return jax.lax.scan(step, carry, (idx, keys, alive, do_eval))
+
+    return block_fn
 
 
 def serial_reference_round(batch_solver, group_params_list, membership,

@@ -203,6 +203,20 @@ def cohort_pspec(ndim: int, data_axes=("data",)) -> P:
     return P(tuple(data_axes), *([None] * (ndim - 1)))
 
 
+def block_staged_pspec(ndim: int, data_axes=("data",)) -> P:
+    """Spec for one staged round-block leaf (cohort ids / solver keys /
+    alive mask of shape ``(B, K, ...)``): the scan (round) axis stays
+    replicated — every device steps through all B rounds — and the client
+    axis (axis 1) shards over the data axes, i.e. ``cohort_pspec`` shifted
+    one axis right.
+
+    >>> from repro.sharding.specs import block_staged_pspec
+    >>> block_staged_pspec(2, data_axes=("data",))   # (B, K) cohort ids
+    PartitionSpec(None, ('data',))
+    """
+    return P(None, tuple(data_axes), *([None] * (ndim - 2)))
+
+
 def group_param_pspec(shape: tuple, model_size: int,
                       model_axis: str = MP_AXIS) -> P:
     """Spec for one m-stacked group-parameter leaf.

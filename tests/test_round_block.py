@@ -1,0 +1,312 @@
+"""Round-block execution: scan-fused multi-round dispatch vs per-round.
+
+The load-bearing property (same style as the streamed==pinned proofs in
+tests/test_population.py): a run with ``FedConfig.block_size > 1`` stages
+cohorts + keys on the host and dispatches B rounds as ONE compiled scan
+with a donated carry — and must reproduce the per-round path bit for bit
+(identical History metrics, params, membership, persistent state) for the
+static (FedAvg, FedGroup) and dynamic (IFCA, FeSEM) frameworks alike,
+since block and per-round paths share the same round core and the same
+fused grouped-eval program.
+
+Also covers the satellites: ``FedConfig.eval_every`` cadence,
+``History.rounds_to_reach``/``max_acc`` NaN handling, the ``dropout_rate``
+zero-weight padding path (padded cohort == variable-size cohort), and the
+single-dispatch grouped eval.
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fedgroup import FedGroupTrainer
+from repro.data.generators import mnist_like
+from repro.fed.engine import FedAvgTrainer, FedConfig, History, RoundMetrics
+from repro.fed.fesem import FeSEMTrainer
+from repro.fed.ifca import IFCATrainer
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    return mnist_like(seed=0, n_clients=40, classes_per_client=2,
+                      total_train=2000, dim=16)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    from repro.models.paper_models import mclr
+    return mclr(16, 10)
+
+
+def _cfg(**kw):
+    base = dict(n_rounds=6, clients_per_round=8, local_epochs=2,
+                batch_size=5, lr=0.05, n_groups=3, pretrain_scale=4, seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _assert_tree_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _run_both(cls, model, data, rounds=6, **cfg_kw):
+    """Same seed, same config — only block_size differs."""
+    per_round = cls(model, data, _cfg(**cfg_kw))
+    h_pr = per_round.run(rounds)
+    blocked = cls(model, data, _cfg(block_size=4, **cfg_kw))
+    h_bl = blocked.run(rounds)
+    return per_round, h_pr, blocked, h_bl
+
+
+class TestBlockBitIdentity:
+    """block_size=4 over 6 rounds: a full block, a partial tail, and (for
+    FedGroup) per-round breaks on cold-start host events in between."""
+
+    def test_fedavg(self, small_model, small_data):
+        a, ha, b, hb = _run_both(FedAvgTrainer, small_model, small_data)
+        assert ha.rounds == hb.rounds
+        _assert_tree_equal(a.params, b.params)
+        assert a.comm_params == b.comm_params
+
+    def test_fedgroup(self, small_model, small_data):
+        a, ha, b, hb = _run_both(FedGroupTrainer, small_model, small_data)
+        assert ha.rounds == hb.rounds
+        _assert_tree_equal(a.group_params, b.group_params)
+        _assert_tree_equal(a.params, b.params)
+        np.testing.assert_array_equal(a.membership, b.membership)
+        # eq.-9 cold start keeps working between blocks: the latest update
+        # directions came out of the block carry
+        np.testing.assert_array_equal(np.asarray(a.group_delta),
+                                      np.asarray(b.group_delta))
+        assert a.comm_params == b.comm_params
+
+    def test_ifca(self, small_model, small_data):
+        a, ha, b, hb = _run_both(IFCATrainer, small_model, small_data)
+        assert ha.rounds == hb.rounds
+        _assert_tree_equal(a.group_params, b.group_params)
+        np.testing.assert_array_equal(a.membership, b.membership)
+        assert a.comm_params == b.comm_params     # m× broadcast accounting
+
+    def test_fesem(self, small_model, small_data):
+        a, ha, b, hb = _run_both(FeSEMTrainer, small_model, small_data)
+        assert ha.rounds == hb.rounds
+        _assert_tree_equal(a.group_params, b.group_params)
+        np.testing.assert_array_equal(a.membership, b.membership)
+        # the carried (N, d_w) local-model matrix round-trips the block
+        np.testing.assert_array_equal(np.asarray(a.local_flat),
+                                      np.asarray(b.local_flat))
+
+    def test_single_block_dispatch(self, small_model, small_data):
+        """4 staged rounds go through the block executor exactly once."""
+        tr = FedAvgTrainer(small_model, small_data, _cfg(block_size=4))
+        calls = []
+        real = tr._block_executor()
+        tr._block_exec = lambda *a, **k: (calls.append(1), real(*a, **k))[1]
+        tr.run(4)
+        assert len(calls) == 1
+        assert len(tr.history.rounds) == 4
+
+
+class TestDropoutPadding:
+    """dropout_rate cohorts pad to K with zero-weight clients so the scan
+    shapes stay static — the padded cohort must equal the per-round path's
+    variable-size cohort (same keys for the alive prefix, weight-0 lanes
+    contribute nothing to aggregation, metrics, or state scatters)."""
+
+    @pytest.mark.parametrize("cls", [FedAvgTrainer, FedGroupTrainer])
+    def test_padded_equals_variable_size(self, cls, small_model, small_data):
+        a, ha, b, hb = _run_both(cls, small_model, small_data,
+                                 dropout_rate=0.3)
+        assert [r.weighted_acc for r in ha.rounds] == \
+            [r.weighted_acc for r in hb.rounds]
+        np.testing.assert_allclose(
+            [r.mean_loss for r in ha.rounds],
+            [r.mean_loss for r in hb.rounds], rtol=1e-6)
+        np.testing.assert_allclose(
+            [r.discrepancy for r in ha.rounds],
+            [r.discrepancy for r in hb.rounds], rtol=1e-6)
+        for la, lb in zip(jax.tree_util.tree_leaves(a.params),
+                          jax.tree_util.tree_leaves(b.params)):
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       atol=1e-6)
+        # comm accounting counts only the alive clients
+        assert a.comm_params == b.comm_params
+
+    def test_fesem_padded_scatter_hits_trash_row_only(self, small_model,
+                                                      small_data):
+        """Zero-weight lanes scatter to the carry's trash row: the real
+        rows of local_flat match the per-round path."""
+        a, _, b, _ = _run_both(FeSEMTrainer, small_model, small_data,
+                               dropout_rate=0.3)
+        np.testing.assert_allclose(np.asarray(a.local_flat),
+                                   np.asarray(b.local_flat), atol=1e-6)
+        np.testing.assert_array_equal(a.membership, b.membership)
+
+
+class TestEvalCadence:
+    def test_eval_every_records_nan_off_cadence(self, small_model,
+                                                small_data):
+        tr = FedAvgTrainer(small_model, small_data, _cfg(eval_every=2))
+        h = tr.run(4)
+        pattern = [math.isnan(r.weighted_acc) for r in h.rounds]
+        assert pattern == [True, False, True, False]
+        assert all(np.isfinite(r.mean_loss) for r in h.rounds)
+
+    def test_block_cadence_matches_per_round(self, small_model, small_data):
+        a, ha, b, hb = _run_both(FedAvgTrainer, small_model, small_data,
+                                 eval_every=3)
+        assert [math.isnan(r.weighted_acc) for r in ha.rounds] == \
+            [math.isnan(r.weighted_acc) for r in hb.rounds]
+        evals_a = [r.weighted_acc for r in ha.rounds
+                   if not math.isnan(r.weighted_acc)]
+        evals_b = [r.weighted_acc for r in hb.rounds
+                   if not math.isnan(r.weighted_acc)]
+        assert evals_a == evals_b and len(evals_a) == 2
+
+    def test_default_cadence_unchanged(self, small_model, small_data):
+        """eval_every=1 (the paper tables) evaluates every round."""
+        tr = FedAvgTrainer(small_model, small_data, _cfg())
+        h = tr.run(2)
+        assert all(not math.isnan(r.weighted_acc) for r in h.rounds)
+
+
+class TestHistoryAggregates:
+    def test_rounds_to_reach(self):
+        h = History()
+        for t, acc in enumerate([0.1, 0.4, 0.35, 0.6]):
+            h.add(RoundMetrics(t, acc, 1.0, 0.0))
+        assert h.rounds_to_reach(0.4) == 1
+        assert h.rounds_to_reach(0.5) == 3
+        assert h.rounds_to_reach(0.9) is None
+
+    def test_nan_rounds_are_ignored(self):
+        h = History()
+        h.add(RoundMetrics(0, float("nan"), 1.0, 0.0))
+        h.add(RoundMetrics(1, 0.7, 1.0, 0.0))
+        h.add(RoundMetrics(2, float("nan"), 1.0, 0.0))
+        assert h.max_acc == 0.7
+        assert h.rounds_to_reach(0.5) == 1
+
+    def test_empty_history(self):
+        assert History().max_acc == 0.0
+        assert History().rounds_to_reach(0.1) is None
+
+
+class TestFusedGroupedEval:
+    def test_single_dispatch_regardless_of_m(self, small_model, small_data):
+        """evaluate_groups is ONE call into the fused grouped-eval program
+        (the retired path was m dispatches + host accumulation)."""
+        tr = FedGroupTrainer(small_model, small_data, _cfg(n_groups=3))
+        tr.round(0)
+        calls = []
+        real = tr._grouped_eval_fn()
+        tr._grouped_eval = lambda *a: (calls.append(1), real(*a))[1]
+        tr.evaluate_groups()
+        assert len(calls) == 1
+
+    def test_matches_per_group_loop(self, small_model, small_data):
+        """The fused integer counts reproduce the retired m-dispatch host
+        loop exactly (clients with membership -1 excluded from both)."""
+        tr = FedGroupTrainer(small_model, small_data, _cfg())
+        tr.round(0)
+        got = tr.evaluate_groups()
+        total_correct, total_n = 0, 0
+        xt, yt, nt = tr._test_stack
+        for j in range(tr.m):
+            members = np.where(tr.membership == j)[0]
+            if len(members) == 0:
+                continue
+            sel = jnp.asarray(members.astype(np.int32))
+            correct = tr.eval_fn(tr.group_param(j), xt[sel], yt[sel],
+                                 nt[sel])
+            total_correct += int(np.sum(np.asarray(correct)))
+            total_n += int(tr.data.n_test[members].sum())
+        assert got == total_correct / max(total_n, 1)
+
+    def test_cold_clients_excluded(self, small_model, small_data):
+        """membership -1 contributes to neither numerator nor denominator."""
+        from repro.fed.client import grouped_eval_correct
+        fn = jax.jit(grouped_eval_correct(small_model))
+        tr = FedGroupTrainer(small_model, small_data, _cfg())
+        tr.round(0)
+        xt, yt, nt = tr._test_stack
+        mem = np.full(tr.n_clients, -1, np.int32)
+        c, tot = fn(tr.group_params, jnp.asarray(mem), xt, yt, nt)
+        assert int(c) == 0 and int(tot) == 0
+
+
+_MESH_DRIVER = r"""
+import json, sys
+import jax
+import numpy as np
+from repro.core.fedgroup import FedGroupTrainer
+from repro.data.generators import mnist_like
+from repro.fed.engine import FedAvgTrainer, FedConfig
+from repro.launch.mesh import make_fed_mesh
+from repro.models.paper_models import mclr
+
+data_ax, model_ax = json.loads(sys.argv[1])
+data = mnist_like(seed=0, n_clients=16, classes_per_client=2,
+                  total_train=1200, dim=16)
+model = mclr(16, 10)
+mesh = make_fed_mesh(data_ax, model_ax)
+base = dict(n_rounds=4, clients_per_round=8, local_epochs=2,
+            batch_size=10, lr=0.05, n_groups=2, pretrain_scale=8, seed=0)
+out = {"devices": jax.device_count()}
+for cls in (FedAvgTrainer, FedGroupTrainer):
+    pr = cls(model, data, FedConfig(**base), mesh=mesh)
+    h_pr = pr.run(4)
+    bl = cls(model, data, FedConfig(**base, block_size=4), mesh=mesh)
+    h_bl = bl.run(4)
+    fw = cls.framework
+    a = np.asarray([[r.weighted_acc, r.mean_loss, r.discrepancy]
+                    for r in h_pr.rounds])
+    b = np.asarray([[r.weighted_acc, r.mean_loss, r.discrepancy]
+                    for r in h_bl.rounds])
+    out[fw + "_metric_diff"] = float(np.abs(a - b).max())
+    pa = pr.group_params if fw == "fedgroup" else pr.params
+    pb = bl.group_params if fw == "fedgroup" else bl.params
+    out[fw + "_param_diff"] = max(
+        float(np.abs(np.asarray(x) - np.asarray(y)).max())
+        for x, y in zip(jax.tree_util.tree_leaves(pa),
+                        jax.tree_util.tree_leaves(pb)))
+    if fw == "fedgroup":
+        out["membership_equal"] = bool(
+            np.array_equal(pr.membership, bl.membership))
+print(json.dumps(out))
+"""
+
+
+class TestBlockOnMesh:
+    """The block executor rides the same mesh placement as the per-round
+    executor (pattern of tests/test_mesh2d.py: forced host devices in a
+    subprocess). Block vs per-round on the SAME mesh compare within
+    reduction-order tolerance — the two compiled programs may schedule
+    collectives differently."""
+
+    @pytest.mark.parametrize("axes", [(4, 1), (2, 2)],
+                             ids=["1d_data", "2d_data_model"])
+    def test_blocked_matches_per_round_on_mesh(self, axes):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            " --xla_force_host_platform_device_count=4")
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                         "src")
+        proc = subprocess.run(
+            [sys.executable, "-c", _MESH_DRIVER, json.dumps(list(axes))],
+            env=env, capture_output=True, text=True, timeout=600)
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        out = json.loads(proc.stdout.strip().splitlines()[-1])
+        assert out["devices"] == 4
+        for fw in ("fedavg", "fedgroup"):
+            assert out[fw + "_metric_diff"] < 2e-3, (fw, out)
+            assert out[fw + "_param_diff"] < 2e-3, (fw, out)
+        assert out["membership_equal"]
