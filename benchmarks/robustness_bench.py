@@ -1,0 +1,133 @@
+"""Benchmark: the fault-tolerant runtime's overhead and efficacy.
+
+Three robustness metrics, persisted to BENCH_robustness.json (>2x
+regression gate in benchmarks/run.py, always included under --quick):
+
+  * ``checkpoint_overhead``: wall ratio of training WITH per-round atomic
+    checkpoints (``FedConfig.checkpoint_every=1``) vs without, interleaved
+    per-segment minima — how much the crash insurance costs when nothing
+    crashes (watched "max": regression when the overhead grows).
+    ``recovery_ms`` additionally records a single cold
+    ``load_checkpoint`` (latest-ckpt discovery + strict restore).
+  * ``quarantine_efficacy``: final weighted accuracy of a FedGroup run
+    whose cohorts carry injected NaN payloads under the in-program update
+    quarantine, relative to a clean run — ~1.0 means the screen fully
+    contains the poison (watched "min"; without the screen the group
+    params go NaN and accuracy collapses).
+  * ``deadline_saving``: injected straggle wall-time over the actual
+    degraded-round cohort wait under ``PopulationConfig.deadline`` — how
+    much of a straggling cohort's delay the deadline path recovers by
+    proceeding with the staged prefix (watched "min").
+
+Schema + gate semantics: docs/benchmarks.md.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+from benchmarks.bench_io import interleaved_best, record_run
+from repro.data.generators import mnist_like
+from repro.fed.engine import FedAvgTrainer, FedConfig
+from repro.fed.population import (FaultConfig, FaultSpec, Population,
+                                  PopulationConfig)
+from repro.fed.store import ArrayClientStore
+from repro.models.paper_models import mclr
+
+
+def _cfg(**kw) -> FedConfig:
+    base = dict(clients_per_round=8, local_epochs=2, batch_size=5, lr=0.05,
+                n_groups=3, pretrain_scale=4, seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _data():
+    return mnist_like(seed=0, n_clients=40, classes_per_client=2,
+                      total_train=2000, dim=16)
+
+
+def _checkpoint_overhead(model, data, ckpt_dir: str, reps: int):
+    """Interleaved 'run 2 more rounds' segments, checkpointing every round
+    vs never — both trainers keep training forward, so every timed segment
+    is real work on warm compiled executors."""
+    plain = FedAvgTrainer(model, data, _cfg())
+    ck = FedAvgTrainer(model, data, _cfg(checkpoint_every=1,
+                                         checkpoint_dir=ckpt_dir))
+    t_plain, t_ck = interleaved_best(
+        [lambda: plain.run(2), lambda: ck.run(2)], reps=reps)
+    overhead = t_ck / max(t_plain, 1e-9)
+
+    fresh = FedAvgTrainer(model, data, _cfg(checkpoint_every=1,
+                                            checkpoint_dir=ckpt_dir))
+    t0 = time.perf_counter()
+    fresh.load_checkpoint(ckpt_dir)
+    recovery_ms = (time.perf_counter() - t0) * 1e3
+    return overhead, recovery_ms
+
+
+def _quarantine_efficacy(model, data, rounds: int):
+    from repro.core.fedgroup import FedGroupTrainer
+    faults = FaultConfig(rounds={t: FaultSpec(corrupt=3, corrupt_mode="nan")
+                                 for t in range(1, rounds, 2)})
+
+    def final_acc(fault_cfg):
+        pop = Population(ArrayClientStore(data),
+                         PopulationConfig(faults=fault_cfg))
+        tr = FedGroupTrainer(model, None, _cfg(quarantine=True),
+                             population=pop)
+        h = tr.run(rounds)
+        tr.close()
+        return h.rounds[-1].weighted_acc, h.total_quarantined
+
+    acc_faulted, quarantined = final_acc(faults)
+    acc_clean, _ = final_acc(None)
+    return acc_faulted / max(acc_clean, 1e-9), quarantined
+
+
+def _deadline_saving(model, data, straggle: float, deadline: float):
+    """Wall time of one deadline-degraded cohort fetch vs the injected
+    straggle it refuses to wait out (prefetch=0: the fetch is synchronous,
+    so the measurement is exactly the degraded gather)."""
+    pop = Population(ArrayClientStore(data), PopulationConfig(
+        faults=FaultConfig(rounds={0: FaultSpec(straggle=straggle)}),
+        prefetch=0, deadline=deadline, stage_chunks=8))
+    tr = FedAvgTrainer(model, None, _cfg(), population=pop)
+    t0 = time.perf_counter()
+    pop.next_cohort()
+    degraded_s = time.perf_counter() - t0
+    tr.close()
+    assert pop.stats["deadline_rounds"] == 1
+    return straggle / max(degraded_s, 1e-9), degraded_s
+
+
+def main(quick: bool = False):
+    model, data = mclr(16, 10), _data()
+    reps = 3 if quick else 6
+    rounds = 5 if quick else 9
+    straggle = 1.5 if quick else 3.0
+
+    with tempfile.TemporaryDirectory() as td:
+        overhead, recovery_ms = _checkpoint_overhead(model, data, td, reps)
+    efficacy, quarantined = _quarantine_efficacy(model, data, rounds)
+    saving, degraded_s = _deadline_saving(model, data, straggle,
+                                          deadline=0.25)
+
+    metrics = {"quick": quick, "rounds": rounds,
+               "checkpoint_overhead": overhead,
+               "recovery_ms": recovery_ms,
+               "quarantine_efficacy": efficacy,
+               "quarantined_clients": int(quarantined),
+               "straggle_s": straggle,
+               "degraded_cohort_s": degraded_s,
+               "deadline_saving": saving}
+    regression, details = record_run(
+        "BENCH_robustness.json", metrics,
+        watch=[("checkpoint_overhead", "max"),
+               ("quarantine_efficacy", "min"),
+               ("deadline_saving", "min")])
+    return {"checkpoint_overhead": round(overhead, 3),
+            "quarantine_efficacy": round(efficacy, 3),
+            "deadline_saving": round(saving, 2),
+            "recovery_ms": round(recovery_ms, 1),
+            "regression": regression, "regression_details": details}

@@ -1,12 +1,35 @@
-"""Pytree checkpointing to .npz (flattened key paths), restart-safe."""
+"""Pytree checkpointing to .npz (flattened key paths), restart-safe.
+
+``save_pytree`` is **atomic**: the archive is written to a temp file in the
+target directory and moved into place with ``os.replace``, so a reader (or
+a resumed run) never observes a half-written checkpoint — a process killed
+mid-save leaves the previous checkpoint intact. The archive is written
+through a file handle, so the path given is the path on disk (``np.savez``
+would silently append ``.npz`` to a bare string path and a later
+``load_pytree(path)`` would miss it).
+
+``load_pytree`` is **strict**: the stored keys must match the template's
+flattened key paths exactly — a missing key is corruption, an extra key is
+a template/file mismatch (e.g. restoring a FeSEM checkpoint into a FedAvg
+trainer), and both raise instead of silently restoring a subset.
+
+The federated engine (``fed/engine.py``) builds its round checkpoints on
+these primitives: ``checkpoint_path``/``latest_checkpoint`` name and find
+per-round snapshots, and ``saved_array_specs`` lets a restorer build a
+template for variable-size state (lazy state-table rows, arrival queues)
+straight from the archive.
+"""
 from __future__ import annotations
 
 import json
 import os
+import re
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+_CKPT_RE = re.compile(r"ckpt_(\d+)\.npz$")
 
 
 def _path_str(path) -> str:
@@ -22,27 +45,86 @@ def _path_str(path) -> str:
 
 
 def save_pytree(path: str, tree, metadata: dict | None = None):
+    """Atomically write ``tree`` (+ JSON-able ``metadata``) to ``path``."""
     flat = {}
     for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         flat[_path_str(kp)] = np.asarray(leaf)
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path, __meta__=json.dumps(metadata or {}), **flat)
+    path = os.path.abspath(path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = f"{path}.tmp-{os.getpid()}"
+    try:
+        # a file handle keeps np.savez from appending its implicit ".npz"
+        # suffix, so `path` is exactly the file on disk
+        with open(tmp, "wb") as f:
+            np.savez(f, __meta__=json.dumps(metadata or {}), **flat)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
 
 
 def load_pytree(path: str, template):
-    """Restore into the structure of ``template`` (shapes must match)."""
+    """Restore into the structure of ``template``.
+
+    Strict: the archive's keys and the template's flattened key paths must
+    match exactly (no silently ignored extras, no missing leaves), and
+    every array shape must match its template leaf.
+    """
     data = np.load(path, allow_pickle=False)
     leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    tmpl_keys = {_path_str(kp) for kp, _ in leaves_paths}
+    file_keys = set(data.files) - {"__meta__"}
+    missing, extra = sorted(tmpl_keys - file_keys), sorted(file_keys - tmpl_keys)
+    if missing or extra:
+        raise ValueError(
+            f"checkpoint {path} does not match the template: "
+            f"missing keys {missing or 'none'}, extra keys {extra or 'none'}")
     leaves = []
     for kp, tmpl in leaves_paths:
         key = _path_str(kp)
         arr = data[key]
         if arr.shape != tmpl.shape:
             raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {tmpl.shape}")
-        leaves.append(jnp.asarray(arr, dtype=tmpl.dtype))
+        # a numpy template leaf stays host-side (jnp would truncate int64
+        # state arrays under the default x64-disabled config)
+        if isinstance(tmpl, np.ndarray):
+            leaves.append(np.asarray(arr, dtype=tmpl.dtype))
+        else:
+            leaves.append(jnp.asarray(arr, dtype=tmpl.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 def load_metadata(path: str) -> dict:
     data = np.load(path, allow_pickle=False)
     return json.loads(str(data["__meta__"]))
+
+
+def saved_array_specs(path: str) -> dict:
+    """``{key: (shape, dtype)}`` of every stored array — enough to build a
+    ``load_pytree`` template for state whose size is only known at save
+    time (lazy state-table rows, scheduler arrival queues)."""
+    data = np.load(path, allow_pickle=False)
+    return {k: (data[k].shape, data[k].dtype)
+            for k in data.files if k != "__meta__"}
+
+
+def checkpoint_path(directory: str, t: int) -> str:
+    """Canonical name of the round-``t`` checkpoint in ``directory``."""
+    return os.path.join(directory, f"ckpt_{t:08d}.npz")
+
+
+def latest_checkpoint(directory: str) -> str | None:
+    """Path of the highest-round ``ckpt_*.npz`` in ``directory`` (None if
+    there is none — e.g. a run killed before its first checkpoint)."""
+    best_t, best = -1, None
+    try:
+        names = os.listdir(directory)
+    except OSError:
+        return None
+    for name in names:
+        m = _CKPT_RE.fullmatch(name)
+        if m and int(m.group(1)) > best_t:
+            best_t, best = int(m.group(1)), os.path.join(directory, name)
+    return best

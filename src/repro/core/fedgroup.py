@@ -175,6 +175,35 @@ class FedGroupTrainer(GroupedTrainer):
         self.group_delta = carry["group_delta"]
 
     # ------------------------------------------------------------------
+    # Checkpointing: + eq.-9 update directions and the cold-start flags
+    # (a resumed trainer must NOT re-run Alg. 3 — membership is static)
+    # ------------------------------------------------------------------
+    def _ckpt_model_tree(self) -> dict:
+        tree = super()._ckpt_model_tree()
+        # group_delta is None until group cold start; zeros keep the
+        # checkpoint schema fixed and "has_group_delta" in the metadata
+        # records which it was
+        tree["group_delta"] = self.group_delta \
+            if self.group_delta is not None \
+            else jnp.zeros((self.m, self.model_size), jnp.float32)
+        return tree
+
+    def _ckpt_load_model(self, tree: dict):
+        super()._ckpt_load_model(tree)
+        self.group_delta = tree["group_delta"]
+
+    def _ckpt_meta_extra(self) -> dict:
+        return {"cold_started": bool(self.cold_started),
+                "last_cold": int(self.last_cold),
+                "has_group_delta": self.group_delta is not None}
+
+    def _ckpt_apply_extra(self, extra: dict):
+        self.cold_started = bool(extra["cold_started"])
+        self.last_cold = int(extra["last_cold"])
+        if not extra["has_group_delta"]:
+            self.group_delta = None
+
+    # ------------------------------------------------------------------
     # Round (Algorithm 2) — one fused dispatch over all groups
     # ------------------------------------------------------------------
     def round(self, t: int, idx=None) -> RoundMetrics:
@@ -203,7 +232,8 @@ class FedGroupTrainer(GroupedTrainer):
         self.params = out.global_params
 
         acc = self._round_eval(t)
-        m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy))
+        m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy),
+                         int(out.n_quarantined))
         self.history.add(m)
         return m
 

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from dataclasses import dataclass, field
 
 import jax
@@ -76,6 +77,17 @@ class FedConfig:
                                          # every round, the paper's tables)
     block_size: int = 1                  # rounds fused per scan dispatch on
                                          # the pinned path (1 = per-round)
+    # in-program update quarantine: screen non-finite / norm-outlier client
+    # updates into the zero-weight path (fed.rounds) so poisoned payloads
+    # never touch group params; counts surface in RoundMetrics.quarantined
+    quarantine: bool = False
+    quarantine_mult: float = 10.0        # outlier threshold: mult x median
+                                         # cohort update norm
+    # checkpoint/restore: every `checkpoint_every` completed rounds write an
+    # atomic ckpt_<t>.npz into `checkpoint_dir` (0 / None = off); a fresh
+    # same-config trainer resumes bit-identically via load_checkpoint()
+    checkpoint_every: int = 0
+    checkpoint_dir: str | None = None
 
 
 @dataclass
@@ -84,6 +96,8 @@ class RoundMetrics:
     weighted_acc: float
     mean_loss: float
     discrepancy: float
+    quarantined: int = 0        # clients screened out by the update
+                                # quarantine this round (0 when off)
 
 
 @dataclass
@@ -101,6 +115,10 @@ class History:
     def max_acc(self) -> float:
         return max((r.weighted_acc for r in self.rounds
                     if not math.isnan(r.weighted_acc)), default=0.0)
+
+    @property
+    def total_quarantined(self) -> int:
+        return sum(r.quarantined for r in self.rounds)
 
     def rounds_to_reach(self, target: float):
         for r in self.rounds:
@@ -177,7 +195,8 @@ class FedAvgTrainer:
             fn = rounds_lib.make_round_executor(
                 self.model, epochs=cfg.local_epochs,
                 batch_size=cfg.batch_size, lr=cfg.lr, mu=cfg.mu,
-                max_samples=self._max_samples, **self._exec_spec())
+                max_samples=self._max_samples, quarantine=cfg.quarantine,
+                quarantine_mult=cfg.quarantine_mult, **self._exec_spec())
             self._round_exec = parallel_lib.make_sharded_executor(
                 fn, self.mesh)
         return self._round_exec
@@ -194,7 +213,8 @@ class FedAvgTrainer:
             fn = rounds_lib.make_block_executor(
                 self.model, epochs=cfg.local_epochs,
                 batch_size=cfg.batch_size, lr=cfg.lr, mu=cfg.mu,
-                max_samples=self._max_samples, **self._block_kwargs())
+                max_samples=self._max_samples, quarantine=cfg.quarantine,
+                quarantine_mult=cfg.quarantine_mult, **self._block_kwargs())
             self._block_exec = parallel_lib.make_sharded_block_executor(
                 fn, self.mesh)
         return self._block_exec
@@ -282,12 +302,12 @@ class FedAvgTrainer:
             idx, keys, alive, jnp.asarray(do_eval))
         self._carry_out(carry)
         # ONE device fetch for the whole block's stacked metrics
-        mean_loss, disc, correct, total = (np.asarray(v) for v in ys)
+        mean_loss, disc, correct, total, n_quar = (np.asarray(v) for v in ys)
         for b in range(len(staged)):
             acc = (int(correct[b]) / max(int(total[b]), 1)
                    if do_eval[b] else float("nan"))
             self.history.add(RoundMetrics(t0 + b, acc, float(mean_loss[b]),
-                                          float(disc[b])))
+                                          float(disc[b]), int(n_quar[b])))
 
     # -- helpers -----------------------------------------------------------
     def _select(self):
@@ -404,7 +424,8 @@ class FedAvgTrainer:
             jnp.zeros(len(idx), jnp.int32), x, y, n, keys)
         self.params = out.global_params
         acc = self._round_eval(t)
-        m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy))
+        m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy),
+                         int(out.n_quarantined))
         self.history.add(m)
         return m
 
@@ -415,13 +436,23 @@ class FedAvgTrainer:
         group cold start, cold newcomers in a staged cohort, a streamed
         population — breaks back to the per-round path (a cohort already
         drawn for the breaking round is carried over as ``pending``, so
-        the rng streams match a pure per-round run exactly)."""
-        total = n_rounds or self.cfg.n_rounds
+        the rng streams match a pure per-round run exactly).
+
+        Runs ``n_rounds`` MORE rounds, labelled from the current history
+        length — so repeated calls keep training forward, and a trainer
+        restored via ``load_checkpoint`` continues with the absolute round
+        labels (and eval/checkpoint cadence) of the uninterrupted run.
+        With ``checkpoint_every``/``checkpoint_dir`` set, an atomic
+        snapshot lands every time a multiple of ``checkpoint_every``
+        completed rounds is crossed."""
+        t0 = len(self.history.rounds)
+        total = t0 + (n_rounds or self.cfg.n_rounds)
         blocks = self.cfg.block_size > 1 and (
             self.population is None or
             getattr(self.population, "block_stageable", False))
-        t, pending = 0, None
+        t, pending = t0, None
         while t < total:
+            prev = t
             if pending is not None:
                 self.round(t, idx=pending)
                 pending = None
@@ -438,7 +469,117 @@ class FedAvgTrainer:
                 elif pending is None:
                     self.round(t)
                     t += 1
+            self._maybe_checkpoint(prev, t)
         return self.history
+
+    # -- checkpoint/restore ------------------------------------------------
+    def _maybe_checkpoint(self, prev_t: int, t: int):
+        e = self.cfg.checkpoint_every
+        if e > 0 and self.cfg.checkpoint_dir and t // e > prev_t // e:
+            self.save_checkpoint()
+
+    def _ckpt_model_tree(self) -> dict:
+        """The device/model state a checkpoint must capture. Doubles as the
+        ``load_pytree`` template: a fresh same-config trainer's live arrays
+        have exactly the checkpointed shapes/dtypes."""
+        return {"params": self.params, "key": self.key}
+
+    def _ckpt_load_model(self, tree: dict):
+        self.params = tree["params"]
+        self.key = tree["key"]
+
+    def _ckpt_meta_extra(self) -> dict:
+        """Framework-specific JSON-able scalars (FedGroup: cold-start
+        flags)."""
+        return {}
+
+    def _ckpt_apply_extra(self, extra: dict):
+        pass
+
+    def save_checkpoint(self, path: str | None = None) -> str:
+        """Atomic full-state snapshot after ``len(history.rounds)``
+        completed rounds: model/group state + both rng streams + metrics +
+        comm accounting, and (when streaming) the population's scheduler
+        stream and state table. ``load_checkpoint`` on a fresh same-config
+        trainer resumes bit-identically."""
+        from repro.checkpoint import io as ckpt_io
+        t = len(self.history.rounds)
+        if path is None:
+            if not self.cfg.checkpoint_dir:
+                raise ValueError("pass a path or set FedConfig"
+                                 ".checkpoint_dir")
+            path = ckpt_io.checkpoint_path(self.cfg.checkpoint_dir, t)
+        state, pop_meta = {}, None
+        if self.population is not None:
+            state, pop_meta = self.population.ckpt_state()
+        meta = {"framework": self.framework, "t": t,
+                "n_clients": int(self.n_clients),
+                "rng": self.rng.bit_generator.state,
+                "select_rng": self.select_rng.bit_generator.state,
+                "comm_params": int(self.comm_params),
+                "history": [[r.round, r.weighted_acc, r.mean_loss,
+                             r.discrepancy, r.quarantined]
+                            for r in self.history.rounds],
+                "extra": self._ckpt_meta_extra(),
+                "population": pop_meta}
+        ckpt_io.save_pytree(path, {"model": self._ckpt_model_tree(),
+                                   "state": state}, meta)
+        return path
+
+    def load_checkpoint(self, path_or_dir: str) -> int:
+        """Restore a ``save_checkpoint`` snapshot into this trainer (fresh,
+        same config, same population construction). Accepts a checkpoint
+        file or a directory (picks the latest ``ckpt_*.npz`` — the
+        kill-and-resume entry point). Returns the completed-round count;
+        ``run(n)`` then continues exactly where the killed run left off."""
+        from repro.checkpoint import io as ckpt_io
+        path = path_or_dir
+        if os.path.isdir(path):
+            path = ckpt_io.latest_checkpoint(path)
+            if path is None:
+                raise FileNotFoundError(
+                    f"no ckpt_*.npz checkpoints in {path_or_dir}")
+        if self.history.rounds:
+            raise RuntimeError("load_checkpoint needs a fresh trainer — "
+                               "this one has already trained")
+        meta = ckpt_io.load_metadata(path)
+        if meta["framework"] != self.framework:
+            raise ValueError(
+                f"checkpoint was written by framework "
+                f"{meta['framework']!r}, this trainer is {self.framework!r}")
+        if int(meta["n_clients"]) != self.n_clients:
+            raise ValueError(
+                f"checkpoint population has {meta['n_clients']} clients, "
+                f"this trainer has {self.n_clients}")
+        if meta["population"] is not None and self.population is None:
+            raise ValueError("checkpoint came from a streamed-population "
+                             "run — construct the trainer with the same "
+                             "population")
+        # the model sub-tree's template is the live (fresh) trainer state;
+        # the population sub-tree's row counts are only known at save time,
+        # so its template comes from the archive's own specs
+        state_tmpl = {
+            k[len("state/"):]: np.zeros(shape, dtype)
+            for k, (shape, dtype) in ckpt_io.saved_array_specs(path).items()
+            if k.startswith("state/")}
+        tree = ckpt_io.load_pytree(
+            path, {"model": self._ckpt_model_tree(), "state": state_tmpl})
+        self._ckpt_load_model(tree["model"])
+        self._ckpt_apply_extra(meta.get("extra") or {})
+        self.rng.bit_generator.state = meta["rng"]
+        self.select_rng.bit_generator.state = meta["select_rng"]
+        self.comm_params = int(meta["comm_params"])
+        self.history = History(
+            [RoundMetrics(int(r[0]), float(r[1]), float(r[2]), float(r[3]),
+                          int(r[4])) for r in meta["history"]])
+        if self.population is not None:
+            if meta["population"] is None:
+                raise ValueError("checkpoint came from a pinned run — "
+                                 "construct the trainer without population")
+            self.population.ckpt_restore(
+                {k: np.asarray(v) for k, v in tree["state"].items()},
+                meta["population"])
+        return int(meta["t"])
 
     def close(self):
         """Stop the population prefetch thread (no-op in pinned mode)."""
@@ -515,3 +656,17 @@ class GroupedTrainer(FedAvgTrainer):
         self.group_params = carry["group_params"]
         self.membership[:] = np.asarray(
             carry["membership"])[:-1].astype(self.membership.dtype)
+
+    # -- checkpointing: m-stacked groups + membership ----------------------
+    def _ckpt_model_tree(self) -> dict:
+        tree = super()._ckpt_model_tree()
+        tree["group_params"] = self.group_params
+        tree["membership"] = np.asarray(self.membership)
+        return tree
+
+    def _ckpt_load_model(self, tree: dict):
+        super()._ckpt_load_model(tree)
+        self.group_params = tree["group_params"]
+        # in place: population mode shares this array with the state table
+        self.membership[:] = np.asarray(
+            tree["membership"]).astype(self.membership.dtype)

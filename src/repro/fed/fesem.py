@@ -136,6 +136,21 @@ class FeSEMTrainer(GroupedTrainer):
             self.local_flat = out.assign_state["local_flat"]
         self.membership[idx] = np.asarray(out.membership)
         acc = self._round_eval(t)
-        m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy))
+        m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy),
+                         int(out.n_quarantined))
         self.history.add(m)
         return m
+
+    # -- checkpointing: + the pinned (N, d_w) local-model matrix ------------
+    # (population mode keeps the rows host-resident in the state table,
+    # which checkpoints itself via Population.ckpt_state)
+    def _ckpt_model_tree(self) -> dict:
+        tree = super()._ckpt_model_tree()
+        if self.local_flat is not None:
+            tree["local_flat"] = self.local_flat
+        return tree
+
+    def _ckpt_load_model(self, tree: dict):
+        super()._ckpt_load_model(tree)
+        if "local_flat" in tree:
+            self.local_flat = tree["local_flat"]

@@ -77,6 +77,7 @@ class IFCATrainer(GroupedTrainer):
         # trainer's membership array IS the table's column)
         self.membership[idx] = np.asarray(out.membership)
         acc = self._round_eval(t)
-        m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy))
+        m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy),
+                         int(out.n_quarantined))
         self.history.add(m)
         return m

@@ -267,7 +267,9 @@ def make_sharded_block_executor(block_fn, mesh=None):
 # ---------------------------------------------------------------------------
 
 def make_parallel_round(model, *, epochs: int, batch_size: int, lr: float,
-                        mu: float, n_groups: int, max_samples: int):
+                        mu: float, n_groups: int, max_samples: int,
+                        quarantine: bool = False,
+                        quarantine_mult: float = 10.0):
     """Returns round_fn(group_params_stacked, membership, X, Y, n, keys)
       -> (new group params stacked, auxiliary global params, group deltas).
 
@@ -279,12 +281,18 @@ def make_parallel_round(model, *, epochs: int, batch_size: int, lr: float,
     round the serial trainers dispatch; only the mesh shardings differ
     (chosen in launch/fed_dryrun.py). The executor's extra outputs
     (discrepancy, flattened group deltas) are dead code here and XLA
-    eliminates them when this round_fn is jitted.
+    eliminates them when this round_fn is jitted. ``quarantine`` installs
+    the same in-program update screen as the engine path — the per-client
+    norm reductions shard over the data axes with the cohort, and the
+    median is a cohort-global reduction the partitioner turns into an
+    all-gather, so screening costs no extra dispatch on a mesh either.
     """
     from repro.fed.rounds import make_round_executor
     core = make_round_executor(model, epochs=epochs, batch_size=batch_size,
                                lr=lr, mu=mu, n_groups=n_groups,
-                               max_samples=max_samples, eta_g=0.0)
+                               max_samples=max_samples, eta_g=0.0,
+                               quarantine=quarantine,
+                               quarantine_mult=quarantine_mult)
 
     def round_fn(group_params, membership, X, Y, n, keys):
         out = core(group_params, membership, X, Y, n, keys)

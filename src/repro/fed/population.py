@@ -28,6 +28,16 @@ is the large-N replacement. A ``Population`` bundles
     asynchrony is invisible to program semantics (streamed results stay
     bit-identical to pinned — docs/scaling.md spells out the guarantee).
 
+The population is also the runtime's *failure domain*: a ``FaultConfig``
+next to the diurnal traces scripts per-round scenarios (mid-round client
+death, straggler delays, corrupted NaN/Inf/blown-up payloads, a killed
+writer thread) against exactly the production code paths;
+``PopulationConfig.deadline`` bounds how long ``next_cohort()`` waits for
+stragglers before degrading to the staged prefix of the cohort; and
+``ckpt_state()``/``ckpt_restore()`` capture the scheduler stream + state
+table for the engine's bit-identical checkpoint/restore
+(docs/architecture.md, "Failure domains & recovery").
+
 The trainers' ``population=`` mode consumes this through three calls:
 ``next_cohort()`` (the scheduled, prefetched round batch),
 ``device_batch(idx)`` (ad-hoc gathers, e.g. cold-start pre-training — a
@@ -42,6 +52,7 @@ from __future__ import annotations
 import itertools
 import queue
 import threading
+import time
 from dataclasses import dataclass, field
 
 import jax
@@ -51,54 +62,155 @@ from repro.fed import parallel as parallel_lib
 from repro.fed.store import (SELECT_STREAM, ClientStateTable, ClientStore,
                              ShardedClientStore, shard_cohort_slices)
 
+# fault-injection sentinel: makes the writer worker return without
+# completing its pending item — the observable state of a thread killed
+# mid-write (dead, pending count still up), with no traceback noise
+_CRASH = object()
+
 
 class _AsyncStateWriter:
     """Single background thread applying host state-table writes in FIFO
     order — the asynchronous half of the per-shard scatter. ``drain()``
     blocks until every enqueued write has landed; readers call it before
     any gather, so the asynchrony never reorders a read past a write and
-    streamed results stay bit-identical to the synchronous path."""
+    streamed results stay bit-identical to the synchronous path.
 
-    def __init__(self):
+    Waits are *bounded*: completion is tracked with an own pending counter
+    + condition variable instead of ``Queue.join()`` (which has no timeout
+    and deadlocks forever if the worker hangs or dies mid-write). A drain
+    that outlives ``timeout`` raises ``RuntimeError`` naming the write in
+    flight; a dead worker with writes still pending is detected and
+    surfaced instead of waited on."""
+
+    def __init__(self, timeout: float = 60.0):
+        self.timeout = timeout
         self._q = queue.Queue()
         self._thread = None
         self._err = None
+        self._cond = threading.Condition()
+        self._pending = 0
+        self._label = None              # description of the in-flight write
 
     def _run(self):
         while True:
             item = self._q.get()
+            if item is None:
+                return
+            fn, args, label = item
+            with self._cond:
+                self._label = label
+            if fn is _CRASH:
+                return                  # injected fault: die, pending stays
             try:
-                if item is None:
-                    return
-                fn, args = item
-                try:
-                    fn(*args)
-                except BaseException as e:  # noqa: BLE001 — raised in drain
-                    self._err = e
-            finally:
-                self._q.task_done()
+                fn(*args)
+            except BaseException as e:  # noqa: BLE001 — raised in drain
+                self._err = e
+            with self._cond:
+                self._pending -= 1
+                self._label = None
+                self._cond.notify_all()
 
-    def submit(self, fn, *args):
+    def submit(self, fn, *args, label: str | None = None):
+        with self._cond:
+            self._pending += 1
         if self._thread is None:
             self._thread = threading.Thread(
                 target=self._run, name="state-table-writer", daemon=True)
             self._thread.start()
-        self._q.put((fn, args))
+        # a dead thread is NOT restarted: the pending count stays up and the
+        # next drain()/close() reports the crash instead of hiding it
+        self._q.put((fn, args, label or getattr(fn, "__name__", "write")))
 
-    def drain(self):
-        if self._thread is not None:
-            self._q.join()
+    def drain(self, timeout: float | None = None):
+        """Block until every enqueued write has landed — bounded. Raises
+        ``RuntimeError`` naming the pending write if it does not complete
+        within ``timeout`` (default: the writer's construction timeout), or
+        immediately if the worker thread died with writes pending."""
+        deadline = time.monotonic() + \
+            (self.timeout if timeout is None else timeout)
+        with self._cond:
+            while self._pending > 0:
+                if self._thread is not None and not self._thread.is_alive():
+                    raise RuntimeError(
+                        f"state-table writer thread died with "
+                        f"{self._pending} write(s) pending (in flight: "
+                        f"{self._label or 'queued, never started'})")
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise RuntimeError(
+                        f"state-table write did not complete within "
+                        f"{self.timeout if timeout is None else timeout:.1f}s"
+                        f": {self._pending} pending (in flight: "
+                        f"{self._label!r})")
+                self._cond.wait(min(remaining, 0.1))
         if self._err is not None:
             err, self._err = self._err, None
             raise RuntimeError("async state-table write failed") from err
 
-    def close(self):
+    def close(self, timeout: float | None = None):
+        # pending writes land first (bounded — a stuck or dead worker
+        # raises here instead of deadlocking shutdown), then stop the worker
+        self.drain(timeout)
         if self._thread is not None:
-            self._q.join()                  # pending writes land first —
-            self._q.put(None)               # only then stop the worker
+            self._q.put(None)
             self._thread.join(timeout=5.0)
             self._thread = None
-        self.drain()                        # surface any write error
+
+    def inject_thread_crash(self):
+        """Fault injection: make the worker exit *without* completing a
+        pending write — the observable signature of a writer thread killed
+        mid-scatter. Subsequent ``drain()``/``close()`` calls raise the
+        dead-thread ``RuntimeError`` instead of hanging."""
+        with self._cond:
+            self._pending += 1
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._run, name="state-table-writer", daemon=True)
+            self._thread.start()
+        self._q.put((_CRASH, (), "<injected writer-thread crash>"))
+
+
+@dataclass
+class FaultSpec:
+    """What goes wrong in one round (all effects compose).
+
+    kill            clients that die mid-round *after* selection: the tail
+                    of the cohort drops (forced newcomers stage first and
+                    survive), floored at 1 survivor — the round proceeds
+                    with the remainder, re-weighted by the segment-sum.
+    straggle        extra staging wall-clock (seconds) for this round's
+                    cohort, spread across the gather chunks — the knob the
+                    ``PopulationConfig.deadline`` path degrades against.
+    corrupt         clients whose *payload* arrives poisoned: ``corrupt``
+                    rng-chosen cohort lanes have their train features
+                    overwritten per ``corrupt_mode`` before the H2D put,
+                    producing NaN/Inf/blown-up local updates for the
+                    quarantine screen to catch.
+    corrupt_mode    "nan" | "inf" | "scale" (multiply features by
+                    ``corrupt_scale`` — finite but norm-outlier updates).
+    writer_crash    kill the async state-table writer thread mid-write this
+                    round (the next drain surfaces it, see
+                    ``_AsyncStateWriter.inject_thread_crash``).
+    """
+    kill: int = 0
+    straggle: float = 0.0
+    corrupt: int = 0
+    corrupt_mode: str = "nan"
+    corrupt_scale: float = 64.0
+    writer_crash: bool = False
+
+
+@dataclass
+class FaultConfig:
+    """Scripted per-round fault scenarios, configured next to the diurnal
+    traces (``PopulationConfig.faults``): ``rounds`` maps round t to the
+    ``FaultSpec`` injected that round; ``seed`` drives the corrupt-lane
+    choice so a scenario replays identically."""
+    rounds: dict
+    seed: int = 0
+
+    def spec(self, t: int) -> FaultSpec | None:
+        return self.rounds.get(int(t))
 
 
 @dataclass
@@ -124,6 +236,15 @@ class PopulationConfig:
     eval_clients: int | None = None
     eval_batch: int = 512           # clients per streamed eval block
     seed: int | None = None
+    # straggler deadline (seconds): how long next_cohort() waits for the
+    # full cohort before proceeding with whatever clients have staged
+    # (>= 1), re-weighting the segment-sum instead of barriering. None =
+    # wait forever (the pre-existing behaviour, byte-identical feeding
+    # path). With a deadline the cohort stages in ``stage_chunks`` pieces
+    # so a partial prefix exists to degrade to.
+    deadline: float | None = None
+    stage_chunks: int = 8
+    faults: FaultConfig | None = None   # scripted per-round fault scenarios
 
 
 @dataclass
@@ -135,6 +256,12 @@ class Cohort:
     y: object
     n: object
     n_new: int = 0                  # newcomers activated this round
+    # scheduler snapshot taken right after this cohort's select() — what a
+    # checkpoint at round t must persist so the resumed scheduler re-draws
+    # round t+1 identically (the live scheduler may already be several
+    # prefetched rounds ahead). Only populated when the attached trainer
+    # checkpoints (``Population.attach`` enables tracking).
+    sched_state: dict | None = None
     _pos: dict = field(default_factory=dict, repr=False)
 
     def positions(self, ids) -> np.ndarray | None:
@@ -261,6 +388,55 @@ class Scheduler:
         self.rounds_scheduled += 1
         return idx, len(new)
 
+    # -- checkpointing ------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Everything ``select`` depends on besides t: rng stream, active
+        set, pending arrival order. ``phase`` is deliberately absent — it
+        is drawn once at construction, so a same-config fresh scheduler
+        regenerates it before ``restore`` rewinds the rng."""
+        return {"rng_state": self.rng.bit_generator.state,
+                "active": self.active.copy(),
+                "arrival_queue": self._arrival_queue.copy(),
+                "last_arrivals": self.last_arrivals.copy(),
+                "rounds_scheduled": int(self.rounds_scheduled)}
+
+    def restore(self, snap: dict):
+        self.rng.bit_generator.state = snap["rng_state"]
+        self.active[:] = np.asarray(snap["active"], bool)
+        self._arrival_queue = np.asarray(snap["arrival_queue"],
+                                         np.int64).copy()
+        self.last_arrivals = np.asarray(snap["last_arrivals"],
+                                        np.int64).copy()
+        self.rounds_scheduled = int(snap["rounds_scheduled"])
+
+
+class _Staging:
+    """Progress record of one cohort's chunked host gather, shared between
+    the producer and a deadline-bounded consumer. The producer appends
+    chunk arrays under ``cond``; a consumer whose deadline fired claims the
+    staged prefix (``claimed``), after which the producer abandons the
+    round. ``done`` flips when every chunk staged — set and checked under
+    the same lock as ``claimed``, so exactly one side owns the cohort."""
+
+    def __init__(self, t: int, idx: np.ndarray, n_new: int,
+                 sched_state: dict | None):
+        self.t = t
+        self.idx = idx
+        self.n_new = n_new
+        self.sched_state = sched_state
+        self.parts = []                 # per-chunk (x, y, n) host tuples
+        self.n_staged = 0
+        self.done = False
+        self.claimed = False
+        self.cond = threading.Condition()
+
+    def take_prefix(self):
+        """(idx, x, y, n) host arrays of the staged prefix — call with
+        ``cond`` held and at least one chunk staged."""
+        xs, ys, ns = zip(*self.parts)
+        return (self.idx[:self.n_staged], np.concatenate(xs),
+                np.concatenate(ys), np.concatenate(ns))
+
 
 class Population:
     """Store + scheduler + state table + prefetcher, bound to one trainer.
@@ -296,6 +472,13 @@ class Population:
         self._cohort = None            # live (most recently consumed) cohort
         self._eval_ids = None
         self.rounds_streamed = 0
+        self._staging = None           # in-flight chunked gather (deadline)
+        self._track_sched = False      # capture per-cohort scheduler snaps
+        self._consumed_sched = None    # snapshot of the last consumed round
+        # robustness counters: fault-injection effects + deadline degradation
+        self.stats = {"deadline_rounds": 0, "deadline_dropped_clients": 0,
+                      "killed_clients": 0, "corrupted_clients": 0,
+                      "writer_crashes": 0}
 
     # -- trainer binding ---------------------------------------------------
     def attach(self, fed_cfg, mesh=None):
@@ -305,6 +488,11 @@ class Population:
         self.mesh = mesh
         self._k = fed_cfg.clients_per_round
         self._dropout = fed_cfg.dropout_rate
+        # a checkpointing trainer needs the *consumed* round's scheduler
+        # state, not the live one (the prefetcher runs ahead) — capture a
+        # snapshot per cohort at select time
+        self._track_sched = bool(getattr(fed_cfg, "checkpoint_every", 0)
+                                 or getattr(fed_cfg, "checkpoint_dir", None))
         if self.cfg.eval_clients is not None and \
                 self.cfg.eval_clients < self.store.n_clients:
             eval_rng = np.random.default_rng(
@@ -373,17 +561,120 @@ class Population:
             or [(0, len(idx))]
         for lo, hi in slices:
             self._writer.submit(self.state.scatter_local_flat,
-                                idx[lo:hi].copy(), rows[lo:hi])
+                                idx[lo:hi].copy(), rows[lo:hi],
+                                label=f"scatter_local_flat[{hi - lo} rows]")
+
+    # -- fault injection ---------------------------------------------------
+    def _fault_spec(self, t: int) -> FaultSpec | None:
+        return self.cfg.faults.spec(t) if self.cfg.faults is not None \
+            else None
+
+    def _apply_kill(self, spec: FaultSpec | None, idx: np.ndarray):
+        """Mid-round client death: the cohort tail drops (forced newcomers
+        stage first and survive), floored at one survivor so the round
+        executor's >=1-client guarantee holds."""
+        if spec is None or spec.kill <= 0 or len(idx) <= 1:
+            return idx
+        keep = max(len(idx) - int(spec.kill), 1)
+        self.stats["killed_clients"] += len(idx) - keep
+        return idx[:keep]
+
+    def _corrupt(self, t: int, spec: FaultSpec | None, arrays,
+                 lane0: int, total: int):
+        """Poison the train features of this round's rng-chosen cohort
+        lanes that fall inside [lane0, lane0 + chunk) — applied on the host
+        arrays before the H2D put, so the device sees exactly what a
+        byzantine / bit-flipped client upload would produce."""
+        if spec is None or spec.corrupt <= 0:
+            return arrays
+        rng = np.random.default_rng([self.cfg.faults.seed, 0xFA017, t])
+        lanes = rng.choice(total, min(int(spec.corrupt), total),
+                           replace=False)
+        x, y, n = arrays
+        hit = lanes[(lanes >= lane0) & (lanes < lane0 + len(n))] - lane0
+        if len(hit) == 0:
+            return arrays
+        x = np.asarray(x).copy()
+        if spec.corrupt_mode == "nan":
+            x[hit] = np.nan
+        elif spec.corrupt_mode == "inf":
+            x[hit] = np.inf
+        elif spec.corrupt_mode == "scale":
+            x[hit] *= spec.corrupt_scale
+        else:
+            raise ValueError(f"unknown corrupt_mode {spec.corrupt_mode!r}")
+        self.stats["corrupted_clients"] += len(hit)
+        return (x, y, n)
+
+    def _pre_round_faults(self, t: int):
+        """select + the pre-gather fault effects shared by the producer and
+        the synchronous path -> (idx, n_new, spec, sched snapshot)."""
+        idx, n_new = self.scheduler.select(t, self._k, self._dropout)
+        snap = self.scheduler.snapshot() if self._track_sched else None
+        spec = self._fault_spec(t)
+        idx = self._apply_kill(spec, np.asarray(idx, np.int64))
+        if spec is not None and spec.writer_crash:
+            self.stats["writer_crashes"] += 1
+            self._writer.inject_thread_crash()
+        return idx, min(n_new, len(idx)), spec, snap
+
+    def _stage_chunks(self, n: int):
+        """Chunk step of an n-client staged gather."""
+        return max(-(-n // max(int(self.cfg.stage_chunks), 1)), 1)
 
     # -- streamed cohorts --------------------------------------------------
+    def _gather_staged(self, t: int, idx: np.ndarray, spec,
+                       n_new: int = 0, snap: dict | None = None):
+        """Producer-side chunked gather for the deadline path: host chunks
+        land in a shared ``_Staging`` record so a consumer whose deadline
+        fired can claim the staged prefix. Returns the full cohort's device
+        arrays, or None when the consumer claimed (the producer abandons
+        the round — the prefix is already being trained on)."""
+        st = _Staging(t, idx, n_new, snap)
+        step = self._stage_chunks(len(idx))
+        n_chunks = -(-len(idx) // step)
+        delay = spec.straggle / n_chunks \
+            if spec is not None and spec.straggle > 0 else 0.0
+        self._staging = st
+        for lo in range(0, len(idx), step):
+            if delay:
+                time.sleep(delay)
+            part = self.store._gather("train", idx[lo:lo + step])
+            part = self._corrupt(t, spec, part, lo, len(idx))
+            with st.cond:
+                if st.claimed:
+                    return None
+                st.parts.append(part)
+                st.n_staged += len(part[2])
+                st.cond.notify_all()
+        with st.cond:
+            if st.claimed:
+                return None
+            st.done = True
+        return self._put(tuple(np.concatenate([p[i] for p in st.parts])
+                               for i in range(3)))
+
     def _produce(self):
         try:
-            for t in itertools.count():
+            for t in itertools.count(self.rounds_streamed):
                 if self._stop.is_set():
                     return
-                idx, n_new = self.scheduler.select(t, self._k, self._dropout)
-                x, y, n = self._gather_put("train", idx)
-                cohort = Cohort(t, np.asarray(idx), x, y, n, n_new)
+                idx, n_new, spec, snap = self._pre_round_faults(t)
+                if self.cfg.deadline is not None:
+                    arrays = self._gather_staged(t, idx, spec, n_new, snap)
+                    if arrays is None:      # consumer claimed the prefix
+                        continue
+                    x, y, n = arrays
+                elif spec is not None and (spec.straggle > 0 or
+                                           spec.corrupt > 0):
+                    if spec.straggle > 0:
+                        time.sleep(spec.straggle)
+                    host = self.store._gather("train", idx)
+                    x, y, n = self._put(
+                        self._corrupt(t, spec, host, 0, len(idx)))
+                else:
+                    x, y, n = self._gather_put("train", idx)
+                cohort = Cohort(t, idx, x, y, n, n_new, sched_state=snap)
                 while not self._stop.is_set():
                     try:
                         self._queue.put(cohort, timeout=0.2)
@@ -399,20 +690,103 @@ class Population:
                 except queue.Full:
                     continue
 
+    def _claim_degraded(self, t: int, st: _Staging) -> Cohort | None:
+        """Deadline fired and round t's staging record is live: claim the
+        staged prefix (waiting, bounded only by chunk progress, for the
+        >=1-client floor) and assemble a truncated cohort. Returns None if
+        the producer finished the full cohort first (it is on the queue)."""
+        with st.cond:
+            while not st.done and not st.claimed and st.n_staged == 0:
+                st.cond.wait(0.05)
+            if st.done:
+                return None
+            st.claimed = True
+            idx, x, y, n = st.take_prefix()
+        dropped = len(st.idx) - len(idx)
+        self.stats["deadline_rounds"] += 1
+        self.stats["deadline_dropped_clients"] += dropped
+        xd, yd, nd = self._put((x, y, n))
+        return Cohort(t, idx, xd, yd, nd, min(st.n_new, len(idx)),
+                      sched_state=st.sched_state)
+
+    def _get_with_deadline(self, t: int) -> Cohort | None:
+        """Prefetch-path queue get bounded by ``cfg.deadline``: when the
+        full cohort is not ready in time, degrade to the staged prefix of
+        the in-flight gather instead of barriering on the stragglers."""
+        end = time.monotonic() + self.cfg.deadline
+        while True:
+            remaining = end - time.monotonic()
+            if remaining <= 0:
+                break
+            try:
+                return self._queue.get(timeout=min(remaining, 0.05))
+            except queue.Empty:
+                continue
+        while True:
+            st = self._staging
+            if st is not None and st.t == t:
+                cohort = self._claim_degraded(t, st)
+                if cohort is not None:
+                    return cohort
+                return self._queue.get()    # full cohort won the race
+            # staging for round t not visible yet (producer between
+            # rounds, or the cohort is already enqueued)
+            try:
+                return self._queue.get(timeout=0.05)
+            except queue.Empty:
+                continue
+
+    def _sync_cohort(self, t: int) -> Cohort:
+        """The prefetch=0 path: selection + gather inline, with the same
+        fault injection and (chunked) deadline degradation as the
+        producer."""
+        idx, n_new, spec, snap = self._pre_round_faults(t)
+        if self.cfg.deadline is None:
+            if spec is not None and (spec.straggle > 0 or spec.corrupt > 0):
+                if spec.straggle > 0:
+                    time.sleep(spec.straggle)
+                host = self.store._gather("train", idx)
+                arrays = self._put(self._corrupt(t, spec, host, 0, len(idx)))
+            else:
+                arrays = self._gather_put("train", idx)
+            return Cohort(t, idx, *arrays, n_new, sched_state=snap)
+        step = self._stage_chunks(len(idx))
+        n_chunks = -(-len(idx) // step)
+        delay = spec.straggle / n_chunks \
+            if spec is not None and spec.straggle > 0 else 0.0
+        end = time.monotonic() + self.cfg.deadline
+        parts, staged = [], 0
+        for lo in range(0, len(idx), step):
+            if staged > 0 and time.monotonic() >= end:
+                self.stats["deadline_rounds"] += 1
+                self.stats["deadline_dropped_clients"] += len(idx) - staged
+                idx = idx[:staged]
+                break
+            if delay:
+                time.sleep(delay)
+            part = self.store._gather("train", idx[lo:lo + step])
+            parts.append(self._corrupt(t, spec, part, lo, len(idx)))
+            staged += len(part[2])
+        arrays = self._put(tuple(np.concatenate([p[i] for p in parts])
+                                 for i in range(3)))
+        return Cohort(t, idx, *arrays, min(n_new, len(idx)),
+                      sched_state=snap)
+
     def next_cohort(self) -> Cohort:
         """The next scheduled round batch, already on (or in flight to) the
         device. With ``prefetch=0`` selection+gather run synchronously —
-        the no-overlap baseline the population bench compares against."""
+        the no-overlap baseline the population bench compares against.
+        With ``cfg.deadline`` set, the wait for the full cohort is bounded:
+        past the deadline the round proceeds with the staged prefix
+        (>= 1 client) and the dropped stragglers simply carry zero weight
+        in the segment-sum (``stats`` counts the degraded rounds)."""
         if self.scheduler is None:
             raise RuntimeError("attach() a trainer first")
         if self._stop.is_set():
             raise RuntimeError("population was close()d — the cohort "
                                "stream cannot be resumed")
         if self.cfg.prefetch <= 0:
-            t = self.rounds_streamed
-            idx, n_new = self.scheduler.select(t, self._k, self._dropout)
-            cohort = Cohort(t, np.asarray(idx),
-                            *self._gather_put("train", idx), n_new)
+            cohort = self._sync_cohort(self.rounds_streamed)
         else:
             if self._thread is None:
                 self._queue = queue.Queue(maxsize=self.cfg.prefetch)
@@ -420,13 +794,17 @@ class Population:
                     target=self._produce, name="population-prefetch",
                     daemon=True)
                 self._thread.start()
-            cohort = self._queue.get()
+            if self.cfg.deadline is not None:
+                cohort = self._get_with_deadline(self.rounds_streamed)
+            else:
+                cohort = self._queue.get()
             if cohort is None:          # producer died — re-raise its error
                 raise RuntimeError(
                     "population prefetch thread failed"
                 ) from self._producer_error
         self.rounds_streamed += 1
         self._cohort = cohort
+        self._consumed_sched = cohort.sched_state
         return cohort
 
     def close(self):
@@ -440,8 +818,67 @@ class Population:
                 pass
             self._thread.join(timeout=2.0)
             self._thread = None
-        # flush + stop the async state writer (pending scatters land first)
+        # flush + stop the async state writer (pending scatters land first;
+        # bounded — a writer killed by a fault raises here instead of
+        # deadlocking shutdown)
         self._writer.close()
+
+    # -- checkpointing ------------------------------------------------------
+    def ckpt_state(self):
+        """(arrays, meta) snapshot of the streamed-population runtime state
+        as of the last *consumed* round: scheduler stream (rng, active set,
+        pending arrivals), lazy state-table rows, round counters. Drains
+        the async writer first so every scatter is visible. Membership is
+        excluded — the trainer checkpoints it (shared array)."""
+        if self.scheduler is None:
+            raise RuntimeError("attach() a trainer first")
+        self._writer.drain()
+        snap = self._consumed_sched
+        if snap is None:
+            if self.rounds_streamed and self.cfg.prefetch > 0 \
+                    and not self._track_sched:
+                raise RuntimeError(
+                    "cannot checkpoint a prefetching population whose "
+                    "trainer was attached without checkpointing enabled "
+                    "(FedConfig.checkpoint_every / checkpoint_dir): the "
+                    "live scheduler stream is already ahead of the "
+                    "consumed round")
+            # nothing consumed yet (or synchronous path): the live
+            # scheduler state is exactly the post-consumed state
+            snap = self.scheduler.snapshot()
+        arrays = {"sched_active": snap["active"],
+                  "sched_arrival_queue": np.asarray(snap["arrival_queue"],
+                                                    np.int64),
+                  "sched_last_arrivals": np.asarray(snap["last_arrivals"],
+                                                    np.int64)}
+        arrays.update(self.state.ckpt_arrays())
+        meta = {"sched_rng": snap["rng_state"],
+                "sched_rounds_scheduled": int(snap["rounds_scheduled"]),
+                "rounds_streamed": int(self.rounds_streamed)}
+        return arrays, meta
+
+    def ckpt_restore(self, arrays: dict, meta: dict):
+        """Rewind a *fresh* (attached, never-streamed) population to a
+        ``ckpt_state`` snapshot: the prefetcher's next select re-draws the
+        checkpointed run's next cohort bit for bit."""
+        if self.scheduler is None:
+            raise RuntimeError("attach() a trainer first, then restore")
+        if self._thread is not None or self.rounds_streamed:
+            raise RuntimeError(
+                "checkpoint restore needs a fresh population — this one "
+                "has already streamed cohorts")
+        self.scheduler.restore({
+            "rng_state": meta["sched_rng"],
+            "active": np.asarray(arrays["sched_active"], bool),
+            "arrival_queue": np.asarray(arrays["sched_arrival_queue"],
+                                        np.int64),
+            "last_arrivals": np.asarray(arrays["sched_last_arrivals"],
+                                        np.int64),
+            "rounds_scheduled": meta["sched_rounds_scheduled"]})
+        self.state.ckpt_restore(arrays)
+        self.rounds_streamed = int(meta["rounds_streamed"])
+        self._consumed_sched = self.scheduler.snapshot() \
+            if self._track_sched else None
 
     # -- streamed evaluation ----------------------------------------------
     def eval_ids(self) -> np.ndarray:

@@ -73,6 +73,8 @@ class RoundOutput(NamedTuple):
     assign_state: object      # updated assignment-stage state (None if static)
     mean_loss: object = 0.0   # scalar: n_i-weighted mean local train loss
                               # of the clients' final local models
+    n_quarantined: object = 0  # scalar int32: alive clients whose updates
+                               # were screened out this round
 
 
 def stack_trees(trees):
@@ -90,14 +92,26 @@ def _group_norms(stacked, m):
 def _make_round_core(model, *, epochs: int, batch_size: int, lr: float,
                      mu: float, n_groups: int, max_samples: int,
                      eta_g: float = 0.0, assign_fn=None,
-                     state_update_fn=None):
+                     state_update_fn=None, quarantine: bool = False,
+                     quarantine_mult: float = 10.0):
     """The fused round as a pure function with an explicit per-client
     ``alive`` weight — shared by ``make_round_executor`` (alive = ones) and
     ``make_block_executor`` (alive = the staged zero-weight padding mask,
     so ``dropout_rate`` cohorts keep static scan shapes). A client with
     ``alive == 0`` still runs the vmapped solver (dead lanes are cheaper
     than dynamic shapes) but contributes nothing to the aggregation, the
-    mean loss, or the discrepancy."""
+    mean loss, or the discrepancy.
+
+    ``quarantine`` adds an in-program update screen on top of the same
+    mask: a client whose local delta is non-finite (NaN/Inf anywhere) or
+    whose delta norm exceeds ``quarantine_mult`` × the cohort median is
+    folded into the zero-weight path — its delta is zeroed, its final
+    local model is replaced by its group's round-start parameters (so
+    FeSEM's state scatter writes something finite), and its alive weight
+    drops to 0 before any reduction. Zero weight alone is NOT enough:
+    ``0 * NaN = NaN`` would still poison the segment-sum matmul, the mean
+    loss, and the discrepancy, which is why the screen rewrites the
+    payloads rather than just down-weighting them."""
     m = n_groups
     solve = client_lib.make_local_solver(
         model, epochs=epochs, batch_size=batch_size, lr=lr, mu=mu,
@@ -114,6 +128,29 @@ def _make_round_core(model, *, epochs: int, batch_size: int, lr: float,
         my_params = jax.tree_util.tree_map(
             lambda g: g[membership], group_params)
         deltas, finals = jax.vmap(solve)(my_params, X, Y, n, keys)
+
+        K = membership.shape[0]
+        ok = None
+        n_quarantined = jnp.int32(0)
+        if quarantine:
+            d_sq = sum(jnp.sum(jnp.square(d.reshape(K, -1)), axis=1)
+                       for d in jax.tree_util.tree_leaves(deltas))
+            finite = jnp.isfinite(d_sq)
+            norms = jnp.sqrt(jnp.where(finite, d_sq, 0.0))
+            # median over the alive, finite updates; NaN comparisons are
+            # False, so an all-poisoned cohort quarantines on finiteness
+            # alone rather than on the (undefined) outlier threshold
+            med = jnp.nanmedian(jnp.where((alive > 0) & finite, norms,
+                                          jnp.nan))
+            outlier = norms > quarantine_mult * jnp.maximum(med, 1e-12)
+            ok = finite & ~outlier
+            n_quarantined = jnp.sum((alive > 0) & ~ok).astype(jnp.int32)
+            okb = lambda t: ok.reshape((-1,) + (1,) * (t.ndim - 1))
+            deltas = jax.tree_util.tree_map(
+                lambda d: jnp.where(okb(d), d, 0.0), deltas)
+            finals = jax.tree_util.tree_map(
+                lambda f, p: jnp.where(okb(f), f, p), finals, my_params)
+            alive = alive * ok.astype(alive.dtype)
 
         # intra-group FedAvg (Alg. 2): segment-sum with n_i weights
         # normalized within each group
@@ -136,11 +173,14 @@ def _make_round_core(model, *, epochs: int, batch_size: int, lr: float,
         # mean local training loss of the final local models (what History
         # reports as mean_loss — one extra forward pass, n_i-weighted)
         per_client_loss = jax.vmap(loss_one)(finals, X, Y, n)
+        if ok is not None:
+            # a quarantined client's batch may itself be poisoned, so even
+            # the sanitized finals can evaluate to NaN on it
+            per_client_loss = jnp.where(ok, per_client_loss, 0.0)
         mean_loss = jnp.sum(per_client_loss * w) / jnp.maximum(jnp.sum(w), 1e-9)
 
         # eq. 4 discrepancy: each client vs its group's intra-aggregated model
         tilde_mine = jax.tree_util.tree_map(lambda t: t[membership], tilde)
-        K = membership.shape[0]
         disc_sq = sum(jnp.sum(jnp.square((f - t).reshape(K, -1)), axis=1)
                       for f, t in zip(jax.tree_util.tree_leaves(finals),
                                       jax.tree_util.tree_leaves(tilde_mine)))
@@ -168,7 +208,7 @@ def _make_round_core(model, *, epochs: int, batch_size: int, lr: float,
             state = state_update_fn(state, membership, deltas, finals)
         return RoundOutput(new_groups, global_params, agg_delta,
                            group_delta_flat, discrepancy, membership, state,
-                           mean_loss)
+                           mean_loss, n_quarantined)
 
     return core
 
@@ -176,7 +216,8 @@ def _make_round_core(model, *, epochs: int, batch_size: int, lr: float,
 def make_round_executor(model, *, epochs: int, batch_size: int, lr: float,
                         mu: float, n_groups: int, max_samples: int,
                         eta_g: float = 0.0, assign_fn=None,
-                        state_update_fn=None):
+                        state_update_fn=None, quarantine: bool = False,
+                        quarantine_mult: float = 10.0):
     """Returns round_fn(group_params, membership, X, Y, n, keys) -> RoundOutput.
 
     group_params: pytree with leading axis m; membership: (K,) int group id
@@ -194,11 +235,16 @@ def make_round_executor(model, *, epochs: int, batch_size: int, lr: float,
     keeps per-client state (e.g. FeSEM's flattened local models) on device
     across rounds via an in-program scatter; the updated state is returned
     in ``RoundOutput.assign_state``.
+
+    ``quarantine=True`` screens non-finite / norm-outlier client updates
+    into the zero-weight path (see ``_make_round_core``) and reports the
+    count in ``RoundOutput.n_quarantined``.
     """
     core = _make_round_core(
         model, epochs=epochs, batch_size=batch_size, lr=lr, mu=mu,
         n_groups=n_groups, max_samples=max_samples, eta_g=eta_g,
-        assign_fn=assign_fn, state_update_fn=state_update_fn)
+        assign_fn=assign_fn, state_update_fn=state_update_fn,
+        quarantine=quarantine, quarantine_mult=quarantine_mult)
 
     def round_fn(group_params, membership, X, Y, n, keys) -> RoundOutput:
         return core(group_params, membership, X, Y, n, keys,
@@ -211,10 +257,12 @@ def make_block_executor(model, *, epochs: int, batch_size: int, lr: float,
                         mu: float, n_groups: int, max_samples: int,
                         eta_g: float = 0.0, assign_fn=None,
                         state_update_fn=None, make_state=None,
-                        state_to_aux=None):
+                        state_to_aux=None, quarantine: bool = False,
+                        quarantine_mult: float = 10.0):
     """Returns block_fn(carry, train_stack, test_stack, idx, keys, alive,
-    do_eval) -> (carry, (mean_loss, discrepancy, correct, total)) — B fused
-    rounds as ONE ``jax.lax.scan`` dispatch over the pinned stacks.
+    do_eval) -> (carry, (mean_loss, discrepancy, correct, total,
+    n_quarantined)) — B fused rounds as ONE ``jax.lax.scan`` dispatch over
+    the pinned stacks.
 
     carry (the donated round-to-round state):
       ``group_params``  m-stacked pytree, updated in place round to round
@@ -232,9 +280,10 @@ def make_block_executor(model, *, epochs: int, batch_size: int, lr: float,
     first, padding after — padded lanes aggregate with weight 0 and scatter
     to the trash row); do_eval: (B,) bool eval-cadence mask
     (``FedConfig.eval_every``). Per-round metrics come back stacked (B,):
-    mean_loss, discrepancy, and the fused grouped-eval correct/total counts
+    mean_loss, discrepancy, the fused grouped-eval correct/total counts
     (0 where do_eval is False) — ints, so the host-side accuracy division
-    reproduces the per-round path bit for bit.
+    reproduces the per-round path bit for bit — and the per-round
+    quarantine counts (all 0 when ``quarantine`` is off).
 
     make_state(aux, idx) builds the per-round assignment state from the
     carried ``aux`` (FeSEM: {"local_flat": aux, "idx": idx}); state_to_aux
@@ -249,7 +298,8 @@ def make_block_executor(model, *, epochs: int, batch_size: int, lr: float,
     core = _make_round_core(
         model, epochs=epochs, batch_size=batch_size, lr=lr, mu=mu,
         n_groups=n_groups, max_samples=max_samples, eta_g=eta_g,
-        assign_fn=assign_fn, state_update_fn=state_update_fn)
+        assign_fn=assign_fn, state_update_fn=state_update_fn,
+        quarantine=quarantine, quarantine_mult=quarantine_mult)
     eval_correct = client_lib.grouped_eval_correct(model)
 
     def block_fn(carry, train_stack, test_stack, idx, keys, alive, do_eval):
@@ -281,7 +331,8 @@ def make_block_executor(model, *, epochs: int, batch_size: int, lr: float,
                 lambda gp, mem: eval_correct(gp, mem[:-1], Xt, Yt, nt),
                 lambda gp, mem: (jnp.int32(0), jnp.int32(0)),
                 out.group_params, membership)
-            return new_c, (out.mean_loss, out.discrepancy, correct, total)
+            return new_c, (out.mean_loss, out.discrepancy, correct, total,
+                           out.n_quarantined)
 
         return jax.lax.scan(step, carry, (idx, keys, alive, do_eval))
 

@@ -366,6 +366,27 @@ class _LazyRows:
     def __len__(self):
         return len(self.rows)
 
+    # -- checkpointing ------------------------------------------------------
+    def ckpt_arrays(self) -> dict:
+        """Dense snapshot {ids, rows, default} — the touched-row count is
+        only known at save time, so restorers rebuild the load template
+        from ``checkpoint.io.saved_array_specs``."""
+        ids = np.fromiter(self.rows.keys(), np.int64, len(self.rows))
+        order = np.argsort(ids)
+        ids = ids[order]
+        rows = (np.stack([self.rows[int(i)] for i in ids])
+                if len(ids) else
+                np.zeros((0,) + self.default_row.shape, np.float32))
+        return {"ids": ids, "rows": rows, "default": self.default_row}
+
+    @classmethod
+    def from_ckpt(cls, arrays: dict) -> "_LazyRows":
+        table = cls(np.asarray(arrays["default"], np.float32))
+        rows = np.asarray(arrays["rows"], np.float32)
+        for r, i in enumerate(np.asarray(arrays["ids"])):
+            table.rows[int(i)] = rows[r].copy()
+        return table
+
 
 class ClientStateTable:
     """Persistent per-client state, gathered/scattered per cohort.
@@ -422,3 +443,29 @@ class ClientStateTable:
     def touched_rows(self) -> int:
         return sum(len(t) for t in (self._local_flat, self._pretrain_dir)
                    if t is not None)
+
+    # -- checkpointing ------------------------------------------------------
+    _CKPT_TABLES = (("local_flat", "_local_flat"),
+                    ("pretrain_dir", "_pretrain_dir"))
+
+    def ckpt_arrays(self) -> dict:
+        """Flat array dict of the lazy row tables, prefixed per table.
+        Membership is checkpointed by the trainer, which shares the array
+        by reference, so it is deliberately absent here."""
+        out = {}
+        for name, attr in self._CKPT_TABLES:
+            table = getattr(self, attr)
+            if table is not None:
+                for k, v in table.ckpt_arrays().items():
+                    out[f"{name}_{k}"] = v
+        return out
+
+    def ckpt_restore(self, arrays: dict):
+        """Rebuild the lazy row tables from a ``ckpt_arrays`` snapshot
+        (tables absent from the snapshot were never initialised at save
+        time and are left as-is)."""
+        for name, attr in self._CKPT_TABLES:
+            if f"{name}_ids" in arrays:
+                sub = {k: np.asarray(arrays[f"{name}_{k}"])
+                       for k in ("ids", "rows", "default")}
+                setattr(self, attr, _LazyRows.from_ckpt(sub))

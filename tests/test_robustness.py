@@ -1,0 +1,481 @@
+"""Fault-tolerant runtime: checkpoint/restore bit-identity, the update
+quarantine, scripted fault injection, straggler deadlines, and the bounded
+async state writer.
+
+The load-bearing guarantees:
+
+  * kill-and-resume is BIT-identical: a run killed between checkpoints,
+    restored into a fresh same-config trainer via ``load_checkpoint``,
+    replays the remaining rounds with exactly the uninterrupted run's
+    History, params, membership, and comm accounting — for the consensus
+    and clustered frameworks alike, pinned and streamed.
+  * the in-program quarantine keeps poisoned (NaN/Inf/blown-up) client
+    updates out of the group parameters, and a screened lane is
+    indistinguishable from a zero-weight dropped lane.
+  * every wait in the failure domain is bounded: writer drains time out
+    with a useful error, dead worker threads are surfaced instead of
+    joined forever, and ``deadline`` degrades a straggling cohort to its
+    staged prefix instead of barriering.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.core.fedgroup import FedGroupTrainer
+from repro.data.generators import mnist_like
+from repro.fed import rounds as rounds_lib
+from repro.fed.engine import FedAvgTrainer, FedConfig
+from repro.fed.fesem import FeSEMTrainer
+from repro.fed.ifca import IFCATrainer
+from repro.fed.population import (FaultConfig, FaultSpec, Population,
+                                  PopulationConfig, Scheduler,
+                                  _AsyncStateWriter)
+from repro.fed.store import ArrayClientStore
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    return mnist_like(seed=0, n_clients=40, classes_per_client=2,
+                      total_train=2000, dim=16)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    from repro.models.paper_models import mclr
+    return mclr(16, 10)
+
+
+def _cfg(**kw):
+    base = dict(n_rounds=4, clients_per_round=8, local_epochs=2,
+                batch_size=5, lr=0.05, n_groups=3, pretrain_scale=4, seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _assert_tree_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _tree_finite(tree) -> bool:
+    return all(np.isfinite(np.asarray(leaf)).all()
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
+STREAM_KW = dict(initial_active=30, arrival_rate=2.0, prefetch=2)
+
+
+def _fresh(cls, model, data, streamed, **cfg_kw):
+    """A fresh trainer; streamed mode gets arrivals so the scheduler's
+    arrival queue / newcomer cold start are part of what resume must
+    reproduce."""
+    cfg = _cfg(**cfg_kw)
+    if streamed:
+        pop = Population(ArrayClientStore(data),
+                         PopulationConfig(**STREAM_KW))
+        return cls(model, None, cfg, population=pop)
+    return cls(model, data, cfg)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint primitives (checkpoint/io.py)
+# ---------------------------------------------------------------------------
+class TestCheckpointIO:
+    def test_save_is_atomic_and_path_exact(self, tmp_path):
+        # bare path WITHOUT .npz: np.savez would silently append the
+        # suffix; the file must land at exactly the requested path
+        path = str(tmp_path / "snap")
+        tree = {"a": jnp.arange(4.0), "b": {"c": jnp.ones((2, 3))}}
+        ckpt_io.save_pytree(path, tree, {"note": "x"})
+        assert os.path.exists(path)
+        assert not list(tmp_path.glob("*.tmp-*"))    # no temp debris
+        back = ckpt_io.load_pytree(path, tree)
+        _assert_tree_equal(back, tree)
+        assert ckpt_io.load_metadata(path) == {"note": "x"}
+
+    def test_numpy_template_preserves_host_dtype(self, tmp_path):
+        # int64 state arrays (membership, arrival queues) must come back
+        # as host numpy int64 even under x64-disabled JAX
+        path = str(tmp_path / "ints.npz")
+        tree = {"ids": np.arange(5, dtype=np.int64),
+                "dev": jnp.ones(3, jnp.float32)}
+        ckpt_io.save_pytree(path, tree)
+        back = ckpt_io.load_pytree(path, tree)
+        assert isinstance(back["ids"], np.ndarray)
+        assert back["ids"].dtype == np.int64
+        assert isinstance(back["dev"], jnp.ndarray)
+
+    def test_strict_load_rejects_key_mismatch(self, tmp_path):
+        path = str(tmp_path / "ck.npz")
+        ckpt_io.save_pytree(path, {"a": np.zeros(2), "b": np.zeros(3)})
+        with pytest.raises(ValueError, match="extra keys.*'b'"):
+            ckpt_io.load_pytree(path, {"a": np.zeros(2)})
+        with pytest.raises(ValueError, match="missing keys.*'c'"):
+            ckpt_io.load_pytree(path, {"a": np.zeros(2), "b": np.zeros(3),
+                                       "c": np.zeros(1)})
+
+    def test_strict_load_rejects_shape_mismatch(self, tmp_path):
+        path = str(tmp_path / "ck.npz")
+        ckpt_io.save_pytree(path, {"a": np.zeros((2, 3))})
+        with pytest.raises(ValueError, match="shape mismatch at a"):
+            ckpt_io.load_pytree(path, {"a": np.zeros((3, 2))})
+
+    def test_latest_checkpoint_picks_highest_round(self, tmp_path):
+        assert ckpt_io.latest_checkpoint(str(tmp_path)) is None
+        assert ckpt_io.latest_checkpoint(str(tmp_path / "missing")) is None
+        for t in (2, 10, 4):
+            ckpt_io.save_pytree(ckpt_io.checkpoint_path(str(tmp_path), t),
+                                {"t": np.asarray(t)})
+        (tmp_path / "not_a_ckpt.npz").write_bytes(b"x")
+        best = ckpt_io.latest_checkpoint(str(tmp_path))
+        assert best == ckpt_io.checkpoint_path(str(tmp_path), 10)
+
+    def test_saved_array_specs(self, tmp_path):
+        path = str(tmp_path / "ck.npz")
+        ckpt_io.save_pytree(path, {"a": np.zeros((2, 3), np.float32),
+                                   "b": np.zeros(5, np.int64)})
+        specs = ckpt_io.saved_array_specs(path)
+        assert specs["a"] == ((2, 3), np.dtype(np.float32))
+        assert specs["b"] == ((5,), np.dtype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# bounded async state writer
+# ---------------------------------------------------------------------------
+class TestAsyncWriter:
+    def test_writes_land_in_order(self):
+        w, out = _AsyncStateWriter(), []
+        for i in range(5):
+            w.submit(out.append, i)
+        w.drain()
+        assert out == [0, 1, 2, 3, 4]
+        w.close()
+
+    def test_drain_timeout_names_inflight_write(self):
+        import time
+        w = _AsyncStateWriter()
+        w.submit(time.sleep, 1.0, label="slow-write")
+        with pytest.raises(RuntimeError,
+                           match=r"did not complete within 0\.2s.*slow-write"):
+            w.drain(timeout=0.2)
+        w.drain(timeout=5.0)                 # the write eventually lands
+        w.close()
+
+    def test_failed_write_surfaces_on_drain(self):
+        w = _AsyncStateWriter()
+
+        def boom():
+            raise ValueError("disk on fire")
+
+        w.submit(boom)
+        with pytest.raises(RuntimeError,
+                           match="async state-table write failed") as ei:
+            w.drain()
+        assert isinstance(ei.value.__cause__, ValueError)
+        w.close()
+
+    def test_dead_thread_is_surfaced_not_awaited(self):
+        w, out = _AsyncStateWriter(), []
+        w.submit(out.append, 1)
+        w.drain()
+        w.inject_thread_crash()
+        w.submit(out.append, 2)             # queued behind the crash
+        with pytest.raises(RuntimeError,
+                           match=r"writer thread died with 2 write"):
+            w.drain(timeout=2.0)
+        # close() reports the same instead of joining forever
+        with pytest.raises(RuntimeError, match="writer thread died"):
+            w.close(timeout=0.5)
+        assert out == [1]
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume bit-identity (the tentpole guarantee)
+# ---------------------------------------------------------------------------
+ALL_TRAINERS = [FedAvgTrainer, FedGroupTrainer, IFCATrainer, FeSEMTrainer]
+
+
+class TestKillAndResume:
+    @pytest.mark.parametrize("streamed", [False, True],
+                             ids=["pinned", "streamed"])
+    @pytest.mark.parametrize("cls", ALL_TRAINERS,
+                             ids=lambda c: c.framework)
+    def test_resume_is_bit_identical(self, cls, streamed, small_model,
+                                     small_data, tmp_path):
+        # uninterrupted reference (no checkpointing)
+        ref = _fresh(cls, small_model, small_data, streamed)
+        h_ref = ref.run(4)
+        ref.close()
+
+        # checkpointed run "killed" after 3 rounds: the last checkpoint is
+        # at t=2, so resume must also RE-execute round 2 identically
+        ck = dict(checkpoint_every=2, checkpoint_dir=str(tmp_path))
+        killed = _fresh(cls, small_model, small_data, streamed, **ck)
+        killed.run(3)
+        killed.close()
+        assert os.path.exists(ckpt_io.checkpoint_path(str(tmp_path), 2))
+
+        resumed = _fresh(cls, small_model, small_data, streamed, **ck)
+        t = resumed.load_checkpoint(str(tmp_path))   # dir -> latest ckpt
+        assert t == 2
+        h_res = resumed.run(4 - t)
+        resumed.close()
+
+        assert h_res.rounds == h_ref.rounds
+        _assert_tree_equal(resumed.params, ref.params)
+        if hasattr(ref, "group_params"):
+            _assert_tree_equal(resumed.group_params, ref.group_params)
+            np.testing.assert_array_equal(resumed.membership, ref.membership)
+        if getattr(ref, "local_flat", None) is not None:
+            np.testing.assert_array_equal(np.asarray(resumed.local_flat),
+                                          np.asarray(ref.local_flat))
+        assert resumed.comm_params == ref.comm_params
+        np.testing.assert_array_equal(np.asarray(resumed.key),
+                                      np.asarray(ref.key))
+
+    def test_run_counts_more_rounds_from_history(self, small_model,
+                                                 small_data):
+        # run(a); run(b) == run(a+b): absolute labels, one rng stream
+        a = FedAvgTrainer(small_model, small_data, _cfg())
+        a.run(2)
+        a.run(2)
+        b = FedAvgTrainer(small_model, small_data, _cfg())
+        b.run(4)
+        assert a.history.rounds == b.history.rounds
+        assert [r.round for r in a.history.rounds] == [0, 1, 2, 3]
+
+    def test_load_checkpoint_rejects_mismatches(self, small_model,
+                                                small_data, tmp_path):
+        tr = FedAvgTrainer(small_model, small_data, _cfg())
+        tr.run(2)
+        path = tr.save_checkpoint(str(tmp_path / "ck.npz"))
+        # wrong framework
+        other = FedGroupTrainer(small_model, small_data, _cfg())
+        with pytest.raises(ValueError, match="framework"):
+            other.load_checkpoint(path)
+        # a trainer that has already trained
+        busy = FedAvgTrainer(small_model, small_data, _cfg())
+        busy.run(1)
+        with pytest.raises(RuntimeError, match="fresh trainer"):
+            busy.load_checkpoint(path)
+        # pinned checkpoint into a streamed trainer
+        pop = Population(ArrayClientStore(small_data), PopulationConfig())
+        st = FedAvgTrainer(small_model, None, _cfg(), population=pop)
+        with pytest.raises(ValueError, match="pinned run"):
+            st.load_checkpoint(path)
+        st.close()
+
+    def test_explicit_earlier_checkpoint_replays_forward(self, small_model,
+                                                         small_data,
+                                                         tmp_path):
+        ck = dict(checkpoint_every=2, checkpoint_dir=str(tmp_path))
+        full = FedAvgTrainer(small_model, small_data, _cfg(**ck))
+        h_full = full.run(4)                 # ckpts at t=2 and t=4
+        early = ckpt_io.checkpoint_path(str(tmp_path), 2)
+        resumed = FedAvgTrainer(small_model, small_data, _cfg(**ck))
+        assert resumed.load_checkpoint(early) == 2   # explicit file, not dir
+        h_res = resumed.run(2)
+        assert h_res.rounds == h_full.rounds
+        _assert_tree_equal(resumed.params, full.params)
+
+
+# ---------------------------------------------------------------------------
+# update quarantine
+# ---------------------------------------------------------------------------
+class TestQuarantine:
+    def test_screened_lane_equals_zero_weight_drop(self, small_model,
+                                                   small_data):
+        """A poisoned-and-quarantined lane must be indistinguishable from
+        the same cohort with that lane zero-weighted out (the dropout
+        padding path) — same group params, loss, and discrepancy."""
+        d = small_data
+        K, m = 4, 2
+        mk = lambda q: rounds_lib._make_round_core(
+            small_model, epochs=1, batch_size=5, lr=0.05, mu=0.0,
+            n_groups=m, max_samples=d.x_train.shape[1], quarantine=q)
+        keys = jax.random.split(jax.random.PRNGKey(3), K)
+        gp = rounds_lib.stack_trees(
+            [small_model.init(k) for k in jax.random.split(
+                jax.random.PRNGKey(7), m)])
+        mem = jnp.asarray([0, 1, 0, 1], jnp.int32)
+        x = jnp.asarray(d.x_train[:K])
+        y = jnp.asarray(d.y_train[:K])
+        n = jnp.asarray(d.n_train[:K])
+        ones = jnp.ones(K, jnp.float32)
+
+        x_poison = x.at[2].set(jnp.nan)
+        out_q = mk(True)(gp, mem, x_poison, y, n, keys, ones)
+        assert int(out_q.n_quarantined) == 1
+        assert _tree_finite(out_q.group_params)
+
+        # oracle: lane 2 dead from the start, payload finite-but-ignored
+        x_dead = x.at[2].set(0.0)
+        alive = ones.at[2].set(0.0)
+        out_d = mk(False)(gp, mem, x_dead, y, n, keys, alive)
+        _assert_tree_equal(out_q.group_params, out_d.group_params)
+        _assert_tree_equal(out_q.global_params, out_d.global_params)
+        np.testing.assert_array_equal(np.asarray(out_q.mean_loss),
+                                      np.asarray(out_d.mean_loss))
+        np.testing.assert_array_equal(np.asarray(out_q.discrepancy),
+                                      np.asarray(out_d.discrepancy))
+
+    def _faulted_run(self, model, data, quarantine, faults=None):
+        pop = Population(ArrayClientStore(data),
+                         PopulationConfig(faults=faults))
+        tr = FedGroupTrainer(model, None, _cfg(quarantine=quarantine),
+                             population=pop)
+        h = tr.run(5)
+        tr.close()
+        return tr, h
+
+    def test_quarantine_keeps_params_finite_under_faults(self, small_model,
+                                                         small_data):
+        faults = FaultConfig(rounds={
+            1: FaultSpec(corrupt=3, corrupt_mode="nan"),
+            2: FaultSpec(corrupt=2, corrupt_mode="inf"),
+            3: FaultSpec(corrupt=2, corrupt_mode="scale")})
+        tr, h = self._faulted_run(small_model, small_data, True, faults)
+        assert _tree_finite(tr.group_params)
+        assert _tree_finite(tr.params)
+        # every poisoned payload was injected...
+        assert tr.population.stats["corrupted_clients"] == 7
+        # ...and at least the non-finite ones were screened, with the
+        # counts surfaced round by round in History
+        assert h.total_quarantined >= 5
+        assert h.rounds[1].quarantined >= 1
+        assert h.rounds[2].quarantined >= 1
+        assert h.rounds[0].quarantined == 0
+        # the screen costs at most noise: the faulted run's final accuracy
+        # tracks a clean run's
+        _, h_clean = self._faulted_run(small_model, small_data, True)
+        assert h.rounds[-1].weighted_acc >= \
+            h_clean.rounds[-1].weighted_acc - 0.25
+
+    def test_without_quarantine_faults_poison_params(self, small_model,
+                                                     small_data):
+        faults = FaultConfig(rounds={1: FaultSpec(corrupt=3,
+                                                  corrupt_mode="nan")})
+        tr, h = self._faulted_run(small_model, small_data, False, faults)
+        assert not _tree_finite(tr.group_params)
+        assert h.total_quarantined == 0
+
+
+# ---------------------------------------------------------------------------
+# fault injection + straggler deadlines
+# ---------------------------------------------------------------------------
+class TestFaultsAndDeadlines:
+    def test_mid_round_client_death(self, small_model, small_data):
+        faults = FaultConfig(rounds={1: FaultSpec(kill=5)})
+        pop = Population(ArrayClientStore(small_data),
+                         PopulationConfig(faults=faults))
+        tr = FedAvgTrainer(small_model, None, _cfg(), population=pop)
+        h = tr.run(3)
+        tr.close()
+        assert pop.stats["killed_clients"] == 5
+        assert len(h.rounds) == 3
+        assert _tree_finite(tr.params)
+
+    def test_kill_floors_at_one_survivor(self, small_model, small_data):
+        faults = FaultConfig(rounds={0: FaultSpec(kill=100)})
+        pop = Population(ArrayClientStore(small_data),
+                         PopulationConfig(faults=faults, prefetch=0))
+        tr = FedAvgTrainer(small_model, None, _cfg(), population=pop)
+        tr.run(1)
+        tr.close()
+        assert pop.stats["killed_clients"] == 7      # 8-client cohort -> 1
+
+    @pytest.mark.parametrize("prefetch", [2, 0], ids=["prefetch", "sync"])
+    def test_deadline_degrades_straggling_round(self, prefetch, small_model,
+                                                small_data):
+        # straggle round 0: the consumer cannot run ahead of the first
+        # round, so the deadline deterministically fires mid-gather (a
+        # later round's cohort could finish staging while the previous
+        # round is still compiling)
+        faults = FaultConfig(rounds={0: FaultSpec(straggle=2.0)})
+        pop = Population(ArrayClientStore(small_data),
+                         PopulationConfig(faults=faults, prefetch=prefetch,
+                                          deadline=0.3, stage_chunks=4))
+        tr = FedAvgTrainer(small_model, None, _cfg(), population=pop)
+        h = tr.run(3)
+        tr.close()
+        assert pop.stats["deadline_rounds"] >= 1
+        assert pop.stats["deadline_dropped_clients"] >= 1
+        assert len(h.rounds) == 3                    # no round was lost
+        assert _tree_finite(tr.params)
+
+    def test_generous_deadline_is_bit_identical_to_pinned(self, small_model,
+                                                          small_data):
+        # the chunked-staging deadline path must not change results when
+        # the deadline never fires
+        pin = FedAvgTrainer(small_model, small_data, _cfg())
+        h_pin = pin.run(3)
+        pop = Population(ArrayClientStore(small_data),
+                         PopulationConfig(deadline=60.0, stage_chunks=4))
+        st = FedAvgTrainer(small_model, None, _cfg(), population=pop)
+        h_st = st.run(3)
+        st.close()
+        assert pop.stats["deadline_rounds"] == 0
+        assert h_st.rounds == h_pin.rounds
+        _assert_tree_equal(st.params, pin.params)
+
+    def test_writer_thread_crash_is_surfaced(self, small_model, small_data):
+        faults = FaultConfig(rounds={1: FaultSpec(writer_crash=True)})
+        pop = Population(ArrayClientStore(small_data),
+                         PopulationConfig(faults=faults))
+        tr = FeSEMTrainer(small_model, None, _cfg(), population=pop)
+        with pytest.raises(RuntimeError, match="writer thread died"):
+            tr.run(4)
+        assert pop.stats["writer_crashes"] == 1
+        pop._stop.set()                  # stop the producer...
+        with pytest.raises(RuntimeError, match="writer thread died"):
+            pop.close()                  # ...shutdown reports, not hangs
+
+
+# ---------------------------------------------------------------------------
+# empty-cohort edge (satellite): selection always yields >= 1 client
+# ---------------------------------------------------------------------------
+class TestEmptyCohortEdge:
+    def test_full_dropout_keeps_one_client(self, small_data):
+        sched = Scheduler(ArrayClientStore(small_data), PopulationConfig(),
+                          seed=0)
+        idx, _ = sched.select(0, 8, dropout_rate=1.0)
+        assert len(idx) == 1
+
+    def test_all_asleep_wakes_one_active(self, small_data):
+        # duty=0 puts every client to sleep every round: selection falls
+        # back to waking one *active* client instead of an empty cohort
+        sched = Scheduler(ArrayClientStore(small_data),
+                          PopulationConfig(availability="diurnal", duty=0.0,
+                                           initial_active=10), seed=0)
+        for t in range(3):
+            idx, _ = sched.select(t, 8)
+            assert len(idx) == 1
+            assert sched.active[idx[0]]
+
+    def test_no_active_clients_is_an_error(self, small_data):
+        sched = Scheduler(ArrayClientStore(small_data),
+                          PopulationConfig(initial_active=0), seed=0)
+        with pytest.raises(RuntimeError, match="no active clients"):
+            sched.select(0, 8)
+
+    def test_pinned_select_keeps_one_client(self, small_model, small_data):
+        tr = FedAvgTrainer(small_model, small_data, _cfg(dropout_rate=1.0))
+        assert len(tr._select()) == 1
+
+    def test_streamed_run_survives_empty_rounds(self, small_model,
+                                                small_data):
+        pop = Population(ArrayClientStore(small_data),
+                         PopulationConfig(availability="diurnal", duty=0.0,
+                                          initial_active=10, prefetch=0))
+        tr = FedAvgTrainer(small_model, None, _cfg(), population=pop)
+        h = tr.run(2)
+        tr.close()
+        assert len(h.rounds) == 2
+        assert _tree_finite(tr.params)
