@@ -1,0 +1,125 @@
+"""Benchmark: staleness-aware async runtime throughput + equivalence cost.
+
+Two async metrics, persisted to BENCH_async.json (>2x regression gate in
+benchmarks/run.py, always included under --quick):
+
+  * ``async_speedup``: wall ratio of the synchronous runtime (inline
+    staging, blocking per-round adoption: ``prefetch=0, async_depth=0``)
+    over the async runtime (``async_depth=D`` bounded in-flight dispatches
+    fed by a prefetching population) training the same rounds under the
+    same scripted straggler trace. The synchronous loop pays every
+    cohort's staging straggle AND the device round-trip serially; the
+    async loop hides staging behind in-flight device compute and folds
+    without barriering the next dispatch (watched "min" — the acceptance
+    floor is >= 1.5x under the trace). ``sync_wall_s`` / ``async_wall_s``
+    record the raw walls, ``staleness_hist`` / ``max_in_flight`` the
+    async run's degradation record.
+  * ``equivalence_overhead``: interleaved wall ratio of the D=1
+    equivalence mode (weight-1.0 bitwise-passthrough folds, same results
+    as sync) over the synchronous per-round path at the same prefetch —
+    what the async machinery costs when its semantics are pinned to the
+    synchronous ones (watched "max").
+
+The full straggler-trace matrix across frameworks x depths lives in
+tests/test_async.py behind the ``slow`` marker (REPRO_SLOW=1); this bench
+keeps the CI gate to the two load-bearing ratios.
+
+Schema + gate semantics: docs/benchmarks.md.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.bench_io import interleaved_best, record_run
+from repro.data.generators import mnist_like
+from repro.fed.engine import FedAvgTrainer, FedConfig
+from repro.fed.population import (FaultConfig, FaultSpec, Population,
+                                  PopulationConfig)
+from repro.fed.store import ArrayClientStore
+from repro.models.paper_models import mclr
+
+
+def _cfg(**kw) -> FedConfig:
+    base = dict(clients_per_round=8, local_epochs=2, batch_size=5, lr=0.05,
+                n_groups=3, pretrain_scale=4, seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _data():
+    return mnist_like(seed=0, n_clients=40, classes_per_client=2,
+                      total_train=2000, dim=16)
+
+
+def _straggle_trace(rounds: int, straggle: float) -> FaultConfig:
+    # round 0 is the untimed compile warmup; every timed round straggles
+    return FaultConfig(rounds={t: FaultSpec(straggle=straggle)
+                               for t in range(1, rounds + 1)})
+
+
+def _timed_run(model, data, *, rounds: int, straggle: float, depth: int,
+               prefetch: int):
+    """Wall time of ``rounds`` rounds under the straggler trace, after one
+    untimed warmup round (compiles the dispatch/fold programs)."""
+    pop = Population(ArrayClientStore(data), PopulationConfig(
+        initial_active=40, arrival_rate=0.0, prefetch=prefetch,
+        faults=_straggle_trace(rounds, straggle)))
+    tr = FedAvgTrainer(model, None, _cfg(async_depth=depth),
+                       population=pop)
+    tr.run(1)                                   # warmup: clean round 0
+    t0 = time.perf_counter()
+    h = tr.run(rounds)
+    wall = time.perf_counter() - t0
+    tr.close()
+    return wall, dict(h.async_stats)
+
+
+def _equivalence_overhead(model, data, reps: int) -> float:
+    """Interleaved 'run 2 more rounds' segments: the D=1 equivalence mode
+    vs the synchronous per-round path, same prefetch, no faults — both
+    keep training forward on warm executors."""
+    def fresh(depth):
+        pop = Population(ArrayClientStore(data), PopulationConfig(
+            initial_active=40, arrival_rate=0.0, prefetch=2))
+        return FedAvgTrainer(model, None, _cfg(async_depth=depth),
+                             population=pop)
+
+    sync, asy = fresh(0), fresh(1)
+    t_sync, t_asy = interleaved_best(
+        [lambda: sync.run(2), lambda: asy.run(2)], reps=reps)
+    sync.close()
+    asy.close()
+    return t_asy / max(t_sync, 1e-9)
+
+
+def main(quick: bool = False):
+    model, data = mclr(16, 10), _data()
+    rounds = 6 if quick else 10
+    straggle = 0.08 if quick else 0.15
+    depth = 4
+    reps = 3 if quick else 6
+
+    sync_wall, _ = _timed_run(model, data, rounds=rounds,
+                              straggle=straggle, depth=0, prefetch=0)
+    async_wall, st = _timed_run(model, data, rounds=rounds,
+                                straggle=straggle, depth=depth,
+                                prefetch=depth)
+    speedup = sync_wall / max(async_wall, 1e-9)
+    overhead = _equivalence_overhead(model, data, reps)
+
+    metrics = {"quick": quick, "rounds": rounds, "straggle_s": straggle,
+               "async_depth": depth,
+               "sync_wall_s": sync_wall, "async_wall_s": async_wall,
+               "async_speedup": speedup,
+               "max_in_flight": int(st.get("max_in_flight", 0)),
+               "staleness_hist": st.get("staleness_hist", {}),
+               "equivalence_overhead": overhead}
+    regression, details = record_run(
+        "BENCH_async.json", metrics,
+        watch=[("async_speedup", "min"),
+               ("equivalence_overhead", "max")])
+    return {"async_speedup": round(speedup, 2),
+            "equivalence_overhead": round(overhead, 3),
+            "sync_wall_s": round(sync_wall, 3),
+            "async_wall_s": round(async_wall, 3),
+            "regression": regression, "regression_details": details}

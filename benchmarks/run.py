@@ -15,6 +15,9 @@
   robustness fault-tolerant runtime: checkpoint overhead + cold recovery,
              quarantine efficacy under injected NaN payloads, straggler
              deadline saving (BENCH_robustness.json)
+  async      staleness-aware async runtime: async-vs-sync throughput
+             under a straggler trace + the D=1 equivalence mode's
+             overhead (BENCH_async.json)
   docs       docs freshness: module doctests + README/docs path existence
   fig5       EDC vs MADC linearity             (paper Fig. 5)
   cost       clustering-measure cost           (paper §3.3 complexity claim)
@@ -31,7 +34,8 @@ the MADC dispatch's relative speed; round_exec the static/IFCA/FeSEM
 executor speedups; round_block the blocked-vs-per-round speedup; mesh2d
 the 2-D/1-D round-time ratio; population the streamed-vs-pinned
 round-time ratio and the prefetch-overlap speedup; robustness the
-checkpoint overhead, quarantine efficacy and deadline saving) —
+checkpoint overhead, quarantine efficacy and deadline saving; async the
+async-vs-sync throughput and the D=1 equivalence-mode overhead) —
 docs/benchmarks.md documents the BENCH_*.json schema and the gate
 semantics. Gate failures print a per-entry diff — which bench, crash vs
 watched-metric regression, best recorded -> measured — before the nonzero
@@ -40,7 +44,7 @@ population, robustness and docs suites, even under ``--only``:
 
 ``python -m benchmarks.run --quick --only cost,table3``  — the CI perf gate
 (effectively
-cost,table3,round_exec,round_block,mesh2d,population,robustness,docs)
+cost,table3,round_exec,round_block,mesh2d,population,robustness,async,docs)
 """
 from __future__ import annotations
 
@@ -52,10 +56,11 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks import (clustering_cost, docs_check, eta_g_sweep,
-                        fig5_edc_madc, mesh2d, population_bench,
-                        robustness_bench, roofline, round_block,
-                        table1_heterogeneity, table3_frameworks)
+from benchmarks import (async_bench, clustering_cost, docs_check,
+                        eta_g_sweep, fig5_edc_madc, mesh2d,
+                        population_bench, robustness_bench, roofline,
+                        round_block, table1_heterogeneity,
+                        table3_frameworks)
 
 BENCHES = {
     "table1": table1_heterogeneity.main,
@@ -65,6 +70,7 @@ BENCHES = {
     "mesh2d": mesh2d.main,
     "population": population_bench.main,
     "robustness": robustness_bench.main,
+    "async": async_bench.main,
     "docs": docs_check.main,
     "fig5": fig5_edc_madc.main,
     "cost": clustering_cost.main,
@@ -87,10 +93,11 @@ def main(argv=None) -> int:
     names = list(BENCHES) if not args.only else args.only.split(",")
     if args.quick:
         # the CI gate must always exercise the round-executor, round-block,
-        # 2-D mesh, population (streamed cohort) and robustness (faults /
-        # checkpoint / deadline) suites + the docs check
+        # 2-D mesh, population (streamed cohort), robustness (faults /
+        # checkpoint / deadline) and async (staleness runtime) suites +
+        # the docs check
         for required in ("round_exec", "round_block", "mesh2d",
-                         "population", "robustness", "docs"):
+                         "population", "robustness", "async", "docs"):
             if required not in names:
                 names.append(required)
     print("name,us_per_call,derived")

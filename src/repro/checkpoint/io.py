@@ -31,6 +31,29 @@ import numpy as np
 
 _CKPT_RE = re.compile(r"ckpt_(\d+)\.npz$")
 
+# Archive format version, bumped whenever the checkpoint schema changes
+# (v1: PR-6 fault-tolerant runtime; v2: async runtime — per-group staleness
+# clocks, async degradation counters and population fault/lease stats in
+# the metadata). Stored inside the ``__meta__`` JSON; archives written
+# before versioning existed read back as v1. Loaders check the version
+# FIRST, so an old file fails with a clear "checkpoint format version X,
+# expected Y" error instead of a raw key/shape-mismatch traceback.
+CKPT_FORMAT_VERSION = 2
+_FORMAT_KEY = "__ckpt_format__"
+
+
+class CheckpointFormatError(ValueError):
+    """Archive was written by a different checkpoint format version."""
+
+
+def _check_format(path: str, meta: dict):
+    version = int(meta.get(_FORMAT_KEY, 1))
+    if version != CKPT_FORMAT_VERSION:
+        raise CheckpointFormatError(
+            f"{path}: checkpoint format version {version}, expected "
+            f"{CKPT_FORMAT_VERSION} — re-create the checkpoint with this "
+            f"version of the code (the archive schema changed)")
+
 
 def _path_str(path) -> str:
     parts = []
@@ -55,8 +78,10 @@ def save_pytree(path: str, tree, metadata: dict | None = None):
     try:
         # a file handle keeps np.savez from appending its implicit ".npz"
         # suffix, so `path` is exactly the file on disk
+        meta = dict(metadata or {})
+        meta[_FORMAT_KEY] = CKPT_FORMAT_VERSION
         with open(tmp, "wb") as f:
-            np.savez(f, __meta__=json.dumps(metadata or {}), **flat)
+            np.savez(f, __meta__=json.dumps(meta), **flat)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)
@@ -70,9 +95,13 @@ def load_pytree(path: str, template):
 
     Strict: the archive's keys and the template's flattened key paths must
     match exactly (no silently ignored extras, no missing leaves), and
-    every array shape must match its template leaf.
+    every array shape must match its template leaf. The format version is
+    checked FIRST — an archive from another version raises
+    ``CheckpointFormatError`` instead of a key/shape mismatch.
     """
     data = np.load(path, allow_pickle=False)
+    if "__meta__" in data.files:
+        _check_format(path, json.loads(str(data["__meta__"])))
     leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     tmpl_keys = {_path_str(kp) for kp, _ in leaves_paths}
     file_keys = set(data.files) - {"__meta__"}
@@ -97,8 +126,15 @@ def load_pytree(path: str, template):
 
 
 def load_metadata(path: str) -> dict:
+    """The archive's JSON metadata. Raises ``CheckpointFormatError`` on a
+    format-version mismatch (e.g. a pre-versioning v1 file) — the engine
+    calls this before any template matching, so old checkpoints fail with
+    the clear version error, never a raw key/shape traceback."""
     data = np.load(path, allow_pickle=False)
-    return json.loads(str(data["__meta__"]))
+    meta = json.loads(str(data["__meta__"]))
+    _check_format(path, meta)
+    meta.pop(_FORMAT_KEY, None)
+    return meta
 
 
 def saved_array_specs(path: str) -> dict:

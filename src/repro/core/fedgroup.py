@@ -170,9 +170,34 @@ class FedGroupTrainer(GroupedTrainer):
         # staging before it ran
         return self.group_delta
 
-    def _carry_out(self, carry: dict):
-        super()._carry_out(carry)
+    def _carry_refs(self, carry: dict):
+        super()._carry_refs(carry)
         self.group_delta = carry["group_delta"]
+
+    # -- async runtime hooks: Alg. 3 before staging, eq. 9 at stage time ---
+    def _async_host_pre(self):
+        if not self.cold_started:
+            self.group_cold_start()
+
+    def _async_cold(self, idx) -> np.ndarray:
+        # the synchronous round()'s cold segment, run at stage time: the
+        # newcomers' eq.-9 routing uses the post-last-fold auxiliary
+        # global model + update directions (self.params / self.group_delta
+        # are re-pointed at the folded carry after every fold)
+        idx = np.asarray(idx)
+        cold = idx[self.membership[idx] < 0]
+        self.last_cold = len(cold)
+        self.comm_params += 2 * len(cold) * self.model_size
+        self.client_cold_start(cold)
+        return cold
+
+    def _async_stream_arg(self, idx):
+        return jnp.asarray(self.membership[idx], jnp.int32)
+
+    def _async_adopt(self, out, idx, folded_groups, folded_global):
+        super()._async_adopt(out, idx, folded_groups, folded_global)
+        self.group_delta = out.group_delta_flat
+        self.params = folded_global
 
     # ------------------------------------------------------------------
     # Checkpointing: + eq.-9 update directions and the cold-start flags

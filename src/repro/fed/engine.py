@@ -34,12 +34,31 @@ or a streamed population (whose arrivals must be observed round by
 round). ``FedConfig.eval_every`` sets the evaluation cadence on both
 paths (1 = every round, the paper's tables; skipped rounds record NaN
 accuracy, which ``History`` ignores).
+
+``FedConfig.async_depth >= 1`` switches ``run()`` to the *asynchronous*
+scheduler loop (``_run_async``): up to ``async_depth`` cohort dispatches
+stay in flight at once and each completed dispatch is folded into the
+live group state with FedAsync staleness weights α·(s+1)^(-β), where the
+staleness s is counted per group (``ClientStateTable.init_group_version``
+/ the pinned trainer's own clock). Every dispatch holds a *lease*: a
+dispatch not ready by ``async_lease_timeout`` is abandoned and requeued
+with capped exponential backoff (``async_backoff``/``async_backoff_cap``,
+at most ``async_max_retries`` times), so a dead client or straggler trace
+degrades throughput instead of stalling the loop. Degradation counters
+(dispatches, folds, max in-flight depth, lease expiries, requeues, a
+staleness histogram) surface in ``History.async_stats`` and — when
+streaming — ``Population.stats``. The D=1 / weight-1.0 configuration is
+the *equivalence mode*: bit-identical to the synchronous block (pinned)
+and per-round (streamed) paths — tests/test_async.py holds all four
+frameworks to it. See docs/architecture.md, "Async execution &
+staleness".
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import os
+import time
 from dataclasses import dataclass, field
 
 import jax
@@ -88,6 +107,23 @@ class FedConfig:
     # same-config trainer resumes bit-identically via load_checkpoint()
     checkpoint_every: int = 0
     checkpoint_dir: str | None = None
+    # asynchronous runtime (0 = synchronous): up to `async_depth` cohort
+    # dispatches in flight, folded FIFO into the live group state with
+    # FedAsync staleness weights alpha * (staleness + 1)^(-beta) — the
+    # staleness counted per group. Depth 1 with the default alpha=1/beta=0
+    # is the equivalence mode: weight 1.0 everywhere, bit-identical to the
+    # synchronous paths.
+    async_depth: int = 0
+    async_alpha: float = 1.0
+    async_beta: float = 0.0
+    # cohort leases: a dispatch whose result is not ready within
+    # `async_lease_timeout` seconds is abandoned and requeued with capped
+    # exponential backoff; after `async_max_retries` requeues the run
+    # raises (the cohort is unrecoverable, not merely slow)
+    async_lease_timeout: float = 30.0
+    async_max_retries: int = 3
+    async_backoff: float = 0.05
+    async_backoff_cap: float = 1.0
 
 
 @dataclass
@@ -104,9 +140,16 @@ class RoundMetrics:
 class History:
     """Per-round metrics. Rounds skipped by the ``eval_every`` cadence
     record ``weighted_acc = nan``; the aggregates below ignore them (a NaN
-    never satisfies ``>=``, and ``max_acc`` filters it explicitly)."""
+    never satisfies ``>=``, and ``max_acc`` filters it explicitly).
+
+    ``async_stats`` is the async runtime's degradation record (empty on
+    synchronous runs): dispatches / folds / max_in_flight / lease_expiries
+    / requeues counters plus ``staleness_hist``, a {max-staleness:
+    fold-count} histogram. Checkpoints carry it, so a resumed run reports
+    totals consistent with an uninterrupted one."""
 
     rounds: list = field(default_factory=list)
+    async_stats: dict = field(default_factory=dict)
 
     def add(self, m: RoundMetrics):
         self.rounds.append(m)
@@ -125,6 +168,22 @@ class History:
             if r.weighted_acc >= target:
                 return r.round
         return None
+
+
+@dataclass
+class _AsyncLease:
+    """One in-flight async dispatch: the staged inputs (kept so an expired
+    lease can be re-dispatched against the then-current state), the
+    per-group version clock snapshot taken at dispatch (staleness at fold =
+    clock now − snapshot), the device result/metric references the loop
+    polls for readiness, the monotonic expiry deadline, and how many leases
+    for this cohort already expired (drives the requeue backoff)."""
+    staged: tuple
+    version: np.ndarray
+    result: object
+    metrics: tuple | None
+    deadline: float
+    attempts: int = 0
 
 
 class FedAvgTrainer:
@@ -167,6 +226,11 @@ class FedAvgTrainer:
         self._block_exec = None     # lazily-built scan-fused round block
         self._grouped_eval = None   # lazily-jitted fused grouped eval
         self._eval_zero_mem = None  # (N,) zeros for the consensus eval
+        self._async_exec = None     # lazily-built async dispatch program
+        self._async_fold_jit = None  # lazily-jitted staleness fold
+        self.group_version = None   # (m,) per-group staleness clock (async)
+        self._resumed = False       # load_checkpoint -> next run() keeps
+                                    # restored Population.stats totals
         # client axis sharded over "data" on multi-device (None = plain
         # jit); REPRO_MODEL_AXIS>1 auto-builds the 2-D (data, model) mesh
         self.mesh = parallel_lib.default_fed_mesh() if mesh is None else mesh
@@ -289,8 +353,17 @@ class FedAvgTrainer:
                     group_delta=self._carry_group_delta(),
                     membership=jnp.asarray(mem), aux=self._carry_aux())
 
-    def _carry_out(self, carry: dict):
+    def _carry_refs(self, carry: dict):
+        """Cheap per-fold reference sync: point the trainer's model-state
+        attributes at the (device) carry — no host fetch. The async loop
+        calls this after every fold so host work between dispatches
+        (FedGroup's eq.-9 cold start, streamed eval) sees current state;
+        ``_carry_out`` adds the O(N) host membership fetch on top and runs
+        only at block end / checkpoint / run end."""
         self.params = carry["global_params"]
+
+    def _carry_out(self, carry: dict):
+        self._carry_refs(carry)
 
     def _run_block(self, t0: int, staged):
         idx = jnp.asarray(np.stack([s[0] for s in staged]))
@@ -445,8 +518,15 @@ class FedAvgTrainer:
         With ``checkpoint_every``/``checkpoint_dir`` set, an atomic
         snapshot lands every time a multiple of ``checkpoint_every``
         completed rounds is crossed."""
+        if self.population is not None:
+            if self._resumed:
+                self._resumed = False    # keep the restored stats totals
+            else:
+                self.population.reset_stats()
         t0 = len(self.history.rounds)
         total = t0 + (n_rounds or self.cfg.n_rounds)
+        if self.cfg.async_depth >= 1:
+            return self._run_async(t0, total)
         blocks = self.cfg.block_size > 1 and (
             self.population is None or
             getattr(self.population, "block_stageable", False))
@@ -470,6 +550,280 @@ class FedAvgTrainer:
                     self.round(t)
                     t += 1
             self._maybe_checkpoint(prev, t)
+        return self.history
+
+    # -- asynchronous runtime (FedConfig.async_depth >= 1) -------------------
+    def _group_version(self):
+        """The (m,) int64 per-group staleness clock: version[g] increments
+        every time a fold lands clients in group g, and a dispatch's
+        staleness is the clock gap between its dispatch and its fold.
+        Shared by reference with the population's state table when
+        streaming (like membership), trainer-owned when pinned."""
+        if self.group_version is None:
+            m = self._exec_spec()["n_groups"]
+            if self.population is not None:
+                self.group_version = \
+                    self.population.state.init_group_version(m)
+            else:
+                self.group_version = np.zeros(m, np.int64)
+        return self.group_version
+
+    def _async_executor(self):
+        """Pinned-path async dispatch program: exactly one block-executor
+        scan step (same round core, same in-program gather and trash-row
+        scatter, no in-program eval — the loop evaluates at fold time),
+        compiled WITHOUT carry donation: the snapshot carry is shared with
+        the live state and every other in-flight dispatch."""
+        if self._async_exec is None:
+            cfg = self.cfg
+            fn = rounds_lib.make_async_dispatch_executor(
+                self.model, epochs=cfg.local_epochs,
+                batch_size=cfg.batch_size, lr=cfg.lr, mu=cfg.mu,
+                max_samples=self._max_samples, quarantine=cfg.quarantine,
+                quarantine_mult=cfg.quarantine_mult, **self._block_kwargs())
+            self._async_exec = parallel_lib.make_async_dispatch_executor(
+                fn, self.mesh)
+        return self._async_exec
+
+    def _async_fold(self):
+        """The staleness fold, jitted with the current state and the
+        dispatch result both donated (``fed.parallel.make_async_fold``):
+        the full-carry fold when pinned, the group-params-only fold when
+        streamed (membership and FeSEM rows stay host-resident there)."""
+        if self._async_fold_jit is None:
+            fold = (rounds_lib.make_staleness_fold()
+                    if self.population is None
+                    else rounds_lib.make_param_fold())
+            self._async_fold_jit = parallel_lib.make_async_fold(fold)
+        return self._async_fold_jit
+
+    def _async_host_pre(self):
+        """Host work that must precede async staging (FedGroup: the Alg. 3
+        group cold start before the first cohort is drawn)."""
+
+    def _async_cold(self, idx) -> np.ndarray:
+        """Stage-time cold-newcomer hook; returns the cold client ids so
+        the pinned loop can patch their rows into the device carry
+        (FedGroup overrides with the eq.-9 client cold start)."""
+        return np.empty(0, np.int64)
+
+    def _async_stream_arg(self, idx):
+        """The streamed round executor's assignment argument, built exactly
+        as the trainer's synchronous ``round()`` builds it."""
+        return jnp.zeros(len(idx), jnp.int32)
+
+    def _async_adopt(self, out, idx, folded_groups, folded_global):
+        """Adopt a folded *streamed* dispatch — mirrors each trainer's
+        synchronous ``round()`` adoption, so the weight-1.0 fold (a
+        bitwise passthrough of the dispatch result) reproduces it
+        exactly."""
+        self.params = folded_global
+
+    def _stage_async(self, t: int):
+        """Stage one cohort for async dispatch: host-pre hook, selection,
+        cold-newcomer handling, solver keys and communication accounting —
+        the same host sequence (and the same rng draw order) as the
+        synchronous paths. Returns ``(cold_ids, staged_inputs)``; the
+        staged inputs are kept device-resident so an expired lease can
+        re-dispatch them against the then-current state."""
+        self._async_host_pre()
+        idx = self._select()
+        cold = np.asarray(self._async_cold(idx))
+        if self.population is None:
+            idx_p, keys, alive, _ = self._stage_round(t, idx)
+            return cold, (jnp.asarray(idx_p), jnp.asarray(keys),
+                          jnp.asarray(alive))
+        x, y, n = self._client_batch(idx)
+        self.key, sk = jax.random.split(self.key)
+        keys = jax.random.split(sk, len(idx))
+        self._stage_comm(len(idx))
+        return cold, (np.asarray(idx), x, y, n, keys,
+                      self._async_stream_arg(idx))
+
+    def _lease_ready(self, leaves) -> bool:
+        """True when every device buffer of a lease's result is computed
+        (tests monkeypatch this to script lease expiries)."""
+        return all(l.is_ready() for l in leaves)
+
+    def _wait_ready(self, lease: _AsyncLease) -> bool:
+        """Poll a lease's result until ready or the deadline passes, the
+        poll interval backing off exponentially. Readiness is checked
+        before the deadline, so an already-computed result is never
+        expired."""
+        leaves = [l for l in jax.tree_util.tree_leaves(
+            (lease.result, lease.metrics)) if hasattr(l, "is_ready")]
+        pause = 1e-4
+        while True:
+            if self._lease_ready(leaves):
+                return True
+            if time.monotonic() >= lease.deadline:
+                return False
+            time.sleep(pause)
+            pause = min(pause * 2.0, 0.005)
+
+    def _run_async(self, t0: int, total: int) -> History:
+        """The asynchronous scheduler loop: keep up to ``async_depth``
+        cohort dispatches in flight against the live state, fold completed
+        dispatches FIFO with per-group staleness weights, requeue expired
+        leases with capped exponential backoff.
+
+        Fold order defines the round index — a requeued cohort folds later
+        and becomes a later round, exactly as an asynchronous server
+        accounts a late client — and the eval / checkpoint cadence is
+        evaluated at fold time. A checkpoint cadence crossing first drains
+        the in-flight window to quiescence: the snapshot then carries no
+        outstanding leases (the staleness clocks, counters and rng streams
+        capture everything else), and a killed-and-resumed run re-stages
+        bit-identically what the uninterrupted run staged after its own
+        drain. Folds are FIFO rather than completion-order: on a device
+        stream dispatches execute in enqueue order anyway, so FIFO loses
+        no overlap and keeps the fold sequence deterministic."""
+        cfg = self.cfg
+        pop = self.population
+        pinned = pop is None
+        depth = max(1, int(cfg.async_depth))
+        ver = self._group_version()
+        st = self.history.async_stats
+        for k in ("dispatches", "folds", "max_in_flight",
+                  "lease_expiries", "requeues"):
+            st.setdefault(k, 0)
+        shist = st.setdefault("staleness_hist", {})
+        self._async_host_pre()
+        carry = self._carry_in() if pinned else None
+        exec_ = self._async_executor() if pinned else self._round_executor()
+        fold = self._async_fold()
+        pending = []                 # in-flight leases, FIFO fold order
+        requeued = []                # (ready_at, staged, attempts)
+        t_stage = t0                 # cohorts staged so far
+        t_fold = t0                  # rounds folded so far
+
+        def dispatch(staged, attempts):
+            if pinned:
+                idx_d, keys_d, alive_d = staged
+                result, mets = exec_(carry, self._train_stack,
+                                     idx_d, keys_d, alive_d)
+            else:
+                result = exec_(self._stacked_group_params(), staged[5],
+                               staged[1], staged[2], staged[3], staged[4])
+                mets = None
+            pending.append(_AsyncLease(
+                staged, ver.copy(), result, mets,
+                time.monotonic() + cfg.async_lease_timeout, attempts))
+            st["dispatches"] += 1
+            st["max_in_flight"] = max(st["max_in_flight"], len(pending))
+
+        def fill(fresh):
+            nonlocal t_stage, carry
+            while len(pending) < depth:
+                now = time.monotonic()
+                ready = next((i for i, r in enumerate(requeued)
+                              if r[0] <= now), None)
+                if ready is not None:
+                    _, staged, attempts = requeued.pop(ready)
+                    dispatch(staged, attempts)
+                elif fresh and t_stage < total:
+                    cold, staged = self._stage_async(t_stage)
+                    if pinned and len(cold):
+                        # the eq.-9 assignments happened on the host —
+                        # patch the newcomers' rows into the device carry
+                        # (a new membership array; in-flight dispatches
+                        # keep the snapshot they were enqueued against)
+                        carry = dict(
+                            carry,
+                            membership=carry["membership"]
+                            .at[jnp.asarray(cold, jnp.int32)].set(
+                                jnp.asarray(self.membership[cold],
+                                            jnp.int32)))
+                    dispatch(staged, 0)
+                    t_stage += 1
+                elif requeued and not pending:
+                    # nothing in flight and every lease is backing off:
+                    # sleep to the earliest retry instead of spinning
+                    time.sleep(max(0.0, min(r[0] for r in requeued)
+                                   - time.monotonic()))
+                else:
+                    break
+
+        def fold_one(lease):
+            nonlocal carry, t_fold
+            s = (ver - lease.version).astype(np.int64)
+            w = rounds_lib.staleness_weight(
+                s, alpha=cfg.async_alpha, beta=cfg.async_beta)
+            key = str(int(s.max()) if s.size else 0)
+            shist[key] = shist.get(key, 0) + 1
+            t = t_fold
+            if pinned:
+                idx_d, _, alive_d = lease.staged
+                carry = fold(carry, lease.result, idx_d, alive_d,
+                             jnp.asarray(w))
+                self._carry_refs(carry)
+                mean_loss, disc, n_quar, mem = (np.asarray(v)
+                                                for v in lease.metrics)
+                occupied = np.unique(mem[np.asarray(alive_d) > 0])
+                acc = (self._fused_eval_acc(carry["group_params"],
+                                            carry["membership"][:-1])
+                       if self._should_eval(t) else float("nan"))
+            else:
+                out = lease.result
+                groups, glob = fold(self._stacked_group_params(),
+                                    out.group_params, out.global_params,
+                                    jnp.asarray(w))
+                self._async_adopt(out, lease.staged[0], groups, glob)
+                occupied = np.unique(np.asarray(out.membership))
+                mean_loss, disc, n_quar = (out.mean_loss, out.discrepancy,
+                                           out.n_quarantined)
+                acc = self._round_eval(t)
+            ver[occupied] += 1
+            st["folds"] += 1
+            self.history.add(RoundMetrics(t, acc, float(mean_loss),
+                                          float(disc), int(n_quar)))
+            t_fold += 1
+
+        def harvest():
+            """Fold the FIFO head if it completes within its lease,
+            abandon + requeue it with capped backoff otherwise."""
+            lease = pending.pop(0)
+            if self._wait_ready(lease):
+                fold_one(lease)
+                return True
+            st["lease_expiries"] += 1
+            if pop is not None:
+                pop.stats["lease_expiries"] += 1
+            attempts = lease.attempts + 1
+            if attempts > cfg.async_max_retries:
+                raise RuntimeError(
+                    f"async cohort lease expired {attempts} times "
+                    f"(async_lease_timeout={cfg.async_lease_timeout}s, "
+                    f"async_max_retries={cfg.async_max_retries}) — the "
+                    f"cohort is unrecoverable, not merely slow")
+            st["requeues"] += 1
+            if pop is not None:
+                pop.stats["requeues"] += 1
+            delay = min(cfg.async_backoff * (2.0 ** lease.attempts),
+                        cfg.async_backoff_cap)
+            requeued.append((time.monotonic() + delay, lease.staged,
+                             attempts))
+            return False
+
+        while t_fold < total:
+            fill(fresh=True)
+            prev = t_fold
+            if pending and harvest():
+                e = cfg.checkpoint_every
+                if e > 0 and cfg.checkpoint_dir and t_fold // e > prev // e:
+                    # drain to quiescence before snapshotting — a
+                    # checkpoint never carries an outstanding lease
+                    while pending or requeued:
+                        fill(fresh=False)
+                        if pending:
+                            harvest()
+                    if pinned:
+                        self._carry_out(carry)
+                    self.save_checkpoint()
+        if pinned:
+            self._carry_out(carry)
+        if pop is not None:
+            pop.stats["writer_retries"] = pop._writer.retries
         return self.history
 
     # -- checkpoint/restore ------------------------------------------------
@@ -521,6 +875,13 @@ class FedAvgTrainer:
                              r.discrepancy, r.quarantined]
                             for r in self.history.rounds],
                 "extra": self._ckpt_meta_extra(),
+                # async runtime state: the per-group staleness clocks and
+                # degradation counters (leases themselves never reach a
+                # checkpoint — the async loop drains to quiescence first)
+                "group_version": ([int(v) for v in self.group_version]
+                                  if self.group_version is not None
+                                  else None),
+                "async_stats": self.history.async_stats,
                 "population": pop_meta}
         ckpt_io.save_pytree(path, {"model": self._ckpt_model_tree(),
                                    "state": state}, meta)
@@ -572,6 +933,10 @@ class FedAvgTrainer:
         self.history = History(
             [RoundMetrics(int(r[0]), float(r[1]), float(r[2]), float(r[3]),
                           int(r[4])) for r in meta["history"]])
+        self.history.async_stats = dict(meta.get("async_stats") or {})
+        gv = meta.get("group_version")
+        if gv is not None:
+            self._group_version()[:] = np.asarray(gv, np.int64)
         if self.population is not None:
             if meta["population"] is None:
                 raise ValueError("checkpoint came from a pinned run — "
@@ -579,6 +944,7 @@ class FedAvgTrainer:
             self.population.ckpt_restore(
                 {k: np.asarray(v) for k, v in tree["state"].items()},
                 meta["population"])
+        self._resumed = True
         return int(meta["t"])
 
     def close(self):
@@ -651,11 +1017,21 @@ class GroupedTrainer(FedAvgTrainer):
     def _stacked_group_params(self):
         return self.group_params
 
-    def _carry_out(self, carry: dict):
-        self.params = carry["global_params"]
+    def _carry_refs(self, carry: dict):
+        super()._carry_refs(carry)
         self.group_params = carry["group_params"]
+
+    def _carry_out(self, carry: dict):
+        self._carry_refs(carry)
         self.membership[:] = np.asarray(
             carry["membership"])[:-1].astype(self.membership.dtype)
+
+    def _async_adopt(self, out, idx, folded_groups, folded_global):
+        # the grouped (IFCA-shaped) adoption: group models + the cohort's
+        # membership writes; the consensus params stay untouched, exactly
+        # as the synchronous round() leaves them
+        self.group_params = folded_groups
+        self.membership[idx] = np.asarray(out.membership)
 
     # -- checkpointing: m-stacked groups + membership ----------------------
     def _ckpt_model_tree(self) -> dict:

@@ -101,9 +101,24 @@ class FeSEMTrainer(GroupedTrainer):
         return jnp.concatenate(
             [self.local_flat, jnp.zeros((1, d_w), self.local_flat.dtype)])
 
-    def _carry_out(self, carry: dict):
-        super()._carry_out(carry)
-        self.local_flat = carry["aux"][:-1]
+    def _carry_refs(self, carry: dict):
+        super()._carry_refs(carry)
+        if carry["aux"] is not None:
+            self.local_flat = carry["aux"][:-1]
+
+    # -- async streaming: the E-step state rides each staged dispatch ------
+    def _async_stream_arg(self, idx):
+        # stage-time gather (drains the async writer, so every earlier
+        # fold's scatter is visible) — the rows a real async client would
+        # have trained from at dispatch time
+        rows = jnp.asarray(self.population.gather_local_flat(idx))
+        return {"local_flat": rows,
+                "idx": jnp.arange(len(idx), dtype=jnp.int32)}
+
+    def _async_adopt(self, out, idx, folded_groups, folded_global):
+        super()._async_adopt(out, idx, folded_groups, folded_global)
+        self.population.scatter_local_flat(
+            idx, np.asarray(out.assign_state["local_flat"]))
 
     def round(self, t: int, idx=None) -> RoundMetrics:
         if idx is None:

@@ -38,6 +38,7 @@ the shardings chosen in launch/fed_dryrun.py.
 from __future__ import annotations
 
 import os
+import warnings
 from functools import partial
 
 import jax
@@ -258,6 +259,72 @@ def make_sharded_block_executor(block_fn, mesh=None):
                             for t in (idx, keys, alive))
         return jfn(carry, train_stack, test_stack, idx, keys, alive,
                    replicate(do_eval))
+
+    return call
+
+
+def make_async_dispatch_executor(dispatch_fn, mesh=None):
+    """jit ``dispatch_fn`` (a ``fed.rounds.make_async_dispatch_executor``
+    product) with the block executor's mesh placement but WITHOUT donating
+    the snapshot carry.
+
+    The async runtime (``FedConfig.async_depth``) keeps up to D dispatches
+    in flight against the *same* current carry, so the dispatch input must
+    stay alive — donation moves to the staleness fold instead
+    (``make_async_fold``), which consumes both the current carry and the
+    per-dispatch result. mesh=None (single device) is the plain-jit
+    special case; with a mesh the carry / pinned stacks / staged cohort
+    tensors are placed exactly as ``make_sharded_block_executor`` places
+    them (group params per ``group_param_pspec``, the (K,)-leading staged
+    arrays over the data axes, the rest replicated).
+    """
+    jfn = jax.jit(dispatch_fn)
+    if mesh is None:
+        return jfn
+    model_size = dict(mesh.shape).get(MP_AXIS, 1)
+    replicate = lambda t: jax.tree_util.tree_map(
+        lambda l: jax.device_put(jnp.asarray(l), NamedSharding(
+            mesh, P(*([None] * jnp.ndim(l))))), t)
+    place_groups = lambda t: jax.tree_util.tree_map(
+        lambda l: jax.device_put(l, NamedSharding(
+            mesh, group_param_pspec(jnp.shape(l), model_size))), t)
+
+    def call(carry, train_stack, idx, keys, alive):
+        carry = dict(carry,
+                     group_params=place_groups(carry["group_params"]),
+                     global_params=place_groups(carry["global_params"]),
+                     group_delta=replicate(carry["group_delta"]),
+                     membership=replicate(carry["membership"]),
+                     aux=replicate(carry["aux"]))
+        train_stack = shard_client_axis(mesh, train_stack)
+        idx, keys, alive = (shard_client_axis(mesh, t)
+                            for t in (idx, keys, alive))
+        return jfn(carry, train_stack, idx, keys, alive)
+
+    return call
+
+
+def make_async_fold(fold_fn):
+    """jit a ``fed.rounds.make_staleness_fold`` product with BOTH the
+    current carry and the per-dispatch result donated — the fold is the
+    single consumer of each dispatch's output buffers, and on the device
+    stream every already-enqueued dispatch that reads the old current
+    carry executes before the fold reuses it (dispatch, then fold, are
+    enqueued in that order by the async loop). Works on mesh and
+    single-device alike: the fold's inputs are outputs of earlier placed
+    computations, so GSPMD propagates their shardings.
+
+    The weight-1.0 passthrough keeps BOTH fold inputs live in the select,
+    so XLA can alias the output to only one of the two donated trees —
+    the resulting "donated buffers were not usable" warning is expected
+    and silenced here (the aliasable side still is aliased)."""
+    jfn = jax.jit(fold_fn, donate_argnums=(0, 1))
+
+    def call(*args):
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return jfn(*args)
 
     return call
 

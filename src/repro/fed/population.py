@@ -67,6 +67,14 @@ from repro.fed.store import (SELECT_STREAM, ClientStateTable, ClientStore,
 # mid-write (dead, pending count still up), with no traceback noise
 _CRASH = object()
 
+# canonical zero state of Population.stats — one schema for fresh runs,
+# reset_stats() and checkpoint restore (async counters are fed by the
+# engine's scheduler loop; writer_retries mirrors _AsyncStateWriter.retries)
+_STATS_ZERO = {"deadline_rounds": 0, "deadline_dropped_clients": 0,
+               "killed_clients": 0, "corrupted_clients": 0,
+               "writer_crashes": 0, "writer_retries": 0,
+               "lease_expiries": 0, "requeues": 0}
+
 
 class _AsyncStateWriter:
     """Single background thread applying host state-table writes in FIFO
@@ -80,16 +88,45 @@ class _AsyncStateWriter:
     and deadlocks forever if the worker hangs or dies mid-write). A drain
     that outlives ``timeout`` raises ``RuntimeError`` naming the write in
     flight; a dead worker with writes still pending is detected and
-    surfaced instead of waited on."""
+    surfaced instead of waited on.
 
-    def __init__(self, timeout: float = 60.0):
+    Transient write failures are retried in place: a write that raises is
+    re-attempted up to ``max_retries`` times with capped exponential
+    backoff (``backoff * 2^attempt``, at most ``backoff_cap`` seconds per
+    sleep) before the error is recorded and surfaced by the next
+    ``drain()`` — one flaky disk write no longer kills the worker thread.
+    ``retries`` counts the recovered attempts (surfaced in
+    ``Population.stats`` as ``writer_retries``)."""
+
+    def __init__(self, timeout: float = 60.0, max_retries: int = 3,
+                 backoff: float = 0.02, backoff_cap: float = 1.0):
         self.timeout = timeout
+        self.max_retries = int(max_retries)
+        self.backoff = float(backoff)
+        self.backoff_cap = float(backoff_cap)
+        self.retries = 0                # failed attempts that later recovered
         self._q = queue.Queue()
         self._thread = None
         self._err = None
         self._cond = threading.Condition()
         self._pending = 0
         self._label = None              # description of the in-flight write
+
+    def _attempt(self, fn, args, label):
+        """Run one write with bounded retry + capped exponential backoff;
+        records the terminal error for drain() after retries exhaust."""
+        for attempt in range(self.max_retries + 1):
+            try:
+                fn(*args)
+                if attempt:
+                    self.retries += attempt
+                return
+            except BaseException as e:  # noqa: BLE001 — raised in drain
+                if attempt == self.max_retries:
+                    self._err = e
+                    return
+                time.sleep(min(self.backoff * (2.0 ** attempt),
+                               self.backoff_cap))
 
     def _run(self):
         while True:
@@ -101,10 +138,7 @@ class _AsyncStateWriter:
                 self._label = label
             if fn is _CRASH:
                 return                  # injected fault: die, pending stays
-            try:
-                fn(*args)
-            except BaseException as e:  # noqa: BLE001 — raised in drain
-                self._err = e
+            self._attempt(fn, args, label)
             with self._cond:
                 self._pending -= 1
                 self._label = None
@@ -475,10 +509,18 @@ class Population:
         self._staging = None           # in-flight chunked gather (deadline)
         self._track_sched = False      # capture per-cohort scheduler snaps
         self._consumed_sched = None    # snapshot of the last consumed round
-        # robustness counters: fault-injection effects + deadline degradation
-        self.stats = {"deadline_rounds": 0, "deadline_dropped_clients": 0,
-                      "killed_clients": 0, "corrupted_clients": 0,
-                      "writer_crashes": 0}
+        # robustness counters: fault-injection effects + deadline
+        # degradation + async-runtime lease churn. Reset per run()
+        # (reset_stats) and carried through ckpt_state/ckpt_restore so a
+        # resumed run reports totals consistent with an uninterrupted one.
+        self.stats = dict(_STATS_ZERO)
+
+    def reset_stats(self):
+        """Zero the robustness counters (called by the engine at the start
+        of a *fresh* run — a checkpoint-resumed run keeps the restored
+        totals so interrupted and uninterrupted runs report alike)."""
+        self.stats = dict(_STATS_ZERO)
+        self._writer.retries = 0
 
     # -- trainer binding ---------------------------------------------------
     def attach(self, fed_cfg, mesh=None):
@@ -833,6 +875,7 @@ class Population:
         if self.scheduler is None:
             raise RuntimeError("attach() a trainer first")
         self._writer.drain()
+        self.stats["writer_retries"] = self._writer.retries
         snap = self._consumed_sched
         if snap is None:
             if self.rounds_streamed and self.cfg.prefetch > 0 \
@@ -854,7 +897,8 @@ class Population:
         arrays.update(self.state.ckpt_arrays())
         meta = {"sched_rng": snap["rng_state"],
                 "sched_rounds_scheduled": int(snap["rounds_scheduled"]),
-                "rounds_streamed": int(self.rounds_streamed)}
+                "rounds_streamed": int(self.rounds_streamed),
+                "stats": {k: int(v) for k, v in self.stats.items()}}
         return arrays, meta
 
     def ckpt_restore(self, arrays: dict, meta: dict):
@@ -877,6 +921,10 @@ class Population:
             "rounds_scheduled": meta["sched_rounds_scheduled"]})
         self.state.ckpt_restore(arrays)
         self.rounds_streamed = int(meta["rounds_streamed"])
+        # restored totals replace the fresh zeros (missing = old snapshot
+        # schema inside a current-format archive: keep zeros for new keys)
+        self.stats = dict(_STATS_ZERO)
+        self.stats.update(meta.get("stats", {}))
         self._consumed_sched = self.scheduler.snapshot() \
             if self._track_sched else None
 

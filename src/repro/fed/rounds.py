@@ -339,6 +339,157 @@ def make_block_executor(model, *, epochs: int, batch_size: int, lr: float,
     return block_fn
 
 
+def staleness_weight(staleness, *, alpha: float = 1.0, beta: float = 0.0):
+    """FedAsync mixing weight w = alpha * (staleness + 1)^(-beta).
+
+    ``staleness`` counts, per group, how many folds landed between this
+    dispatch's parameter snapshot and its own fold (0 = fresh). Properties
+    the async runtime relies on (tested in tests/test_async.py):
+
+      * s = 0 reduces to exactly ``alpha`` (1^(-beta) == 1.0 in IEEE),
+      * monotone non-increasing in s for beta >= 0,
+      * alpha = 1, beta = 0 gives exactly 1.0 for every staleness — the
+        equivalence mode whose fold is a bitwise passthrough of the
+        dispatch result (``make_staleness_fold`` special-cases w == 1).
+
+    Host-side numpy (the weights are (m,) scalars computed at fold time).
+    """
+    s = np.asarray(staleness, np.float64)
+    if np.any(s < 0):
+        raise ValueError(f"negative staleness {s}")
+    return np.asarray(alpha * (s + 1.0) ** (-float(beta)), np.float32)
+
+
+def _mix_weighted(weights):
+    """Per-leaf convex mix new = (1-w)*cur + w*res over the leading group
+    axis, with w == 1.0 an exact bitwise passthrough of ``res`` (0*cur +
+    1*res is NOT bit-exact when cur is -0.0 or non-finite, so the
+    passthrough is a ``where`` select, not arithmetic)."""
+    def mix(cur, res):
+        w = weights.reshape((-1,) + (1,) * (res.ndim - 1)).astype(res.dtype)
+        return jnp.where(w == 1.0, res, (1.0 - w) * cur + w * res)
+    return mix
+
+
+def make_async_dispatch_executor(model, *, epochs: int, batch_size: int,
+                                 lr: float, mu: float, n_groups: int,
+                                 max_samples: int, eta_g: float = 0.0,
+                                 assign_fn=None, state_update_fn=None,
+                                 make_state=None, state_to_aux=None,
+                                 quarantine: bool = False,
+                                 quarantine_mult: float = 10.0):
+    """Returns dispatch_fn(carry, train_stack, idx, keys, alive) ->
+    (result_carry, (mean_loss, discrepancy, n_quarantined, membership)) —
+    ONE staged round computed against a *snapshot* carry, for the bounded
+    in-flight async window (``FedConfig.async_depth``).
+
+    This is exactly one ``make_block_executor`` scan step (same core, same
+    in-program gather from the pinned stacks, same trash-row scatter
+    convention), minus the in-program eval — the async loop evaluates at
+    *fold* time, on the folded parameters, through the same fused grouped
+    eval program. The snapshot carry is NOT donated (at depth D > 1 it is
+    shared with the server's live params and other in-flight dispatches);
+    the *result* carry is per-dispatch and donated into the staleness fold
+    (``make_staleness_fold``). The cohort's post-assignment membership
+    rides out with the metrics so the fold can bump the touched groups'
+    staleness clocks without an extra device fetch.
+    """
+    core = _make_round_core(
+        model, epochs=epochs, batch_size=batch_size, lr=lr, mu=mu,
+        n_groups=n_groups, max_samples=max_samples, eta_g=eta_g,
+        assign_fn=assign_fn, state_update_fn=state_update_fn,
+        quarantine=quarantine, quarantine_mult=quarantine_mult)
+
+    def dispatch_fn(carry, train_stack, idx, keys, alive):
+        X_all, Y_all, n_all = train_stack
+        x, y, n = X_all[idx], Y_all[idx], n_all[idx]
+        trash = carry["membership"].shape[0] - 1
+        ix_eff = jnp.where(alive > 0, idx, trash).astype(jnp.int32)
+        if assign_fn is None:
+            arg = carry["membership"][idx]
+        elif make_state is not None:
+            arg = make_state(carry["aux"], ix_eff)
+        else:
+            arg = None
+        out = core(carry["group_params"], arg, x, y, n, keys, alive)
+        membership = carry["membership"].at[ix_eff].set(out.membership)
+        aux = carry["aux"]
+        if state_to_aux is not None:
+            aux = state_to_aux(out.assign_state)
+        result = dict(group_params=out.group_params,
+                      global_params=out.global_params,
+                      group_delta=out.group_delta_flat,
+                      membership=membership, aux=aux)
+        return result, (out.mean_loss, out.discrepancy, out.n_quarantined,
+                        out.membership)
+
+    return dispatch_fn
+
+
+def make_staleness_fold():
+    """Returns fold_fn(current, result, idx, alive, weights) -> carry —
+    fold a completed async dispatch into the server's *current* carry with
+    per-group staleness weights (``staleness_weight``).
+
+      * group_params: per-group convex mix (1-w)·current + w·result, with
+        w == 1.0 a bitwise ``where`` passthrough of the result,
+      * global_params: the result's own auxiliary model when every weight
+        is 1.0 (bitwise — the D=1 equivalence mode), the mean of the
+        folded groups otherwise,
+      * group_delta: the dispatch's flattened update directions (eq.-9
+        cold-start routing keys off the *direction*, not the magnitude),
+      * membership / aux: only the cohort's trash-row-redirected lanes are
+        scattered from the result, so at depth D > 1 concurrent dispatches
+        merge row-wise (last fold wins on overlapping rows) instead of one
+        dispatch's full-table snapshot clobbering the other's writes.
+
+    jit with ``donate_argnums=(0, 1)`` (the engine does): the current
+    carry and the per-dispatch result are both consumed, so the folded
+    carry reuses their buffers — in-flight dispatches already enqueued
+    against the old buffers execute before the fold on the device stream.
+    """
+    def fold_fn(current, result, idx, alive, weights):
+        trash = current["membership"].shape[0] - 1
+        ix_eff = jnp.where(alive > 0, idx, trash).astype(jnp.int32)
+        membership = current["membership"].at[ix_eff].set(
+            result["membership"][ix_eff])
+        aux = current["aux"]
+        if aux is not None:
+            aux = aux.at[ix_eff].set(result["aux"][ix_eff])
+        mix = _mix_weighted(weights)
+        groups = jax.tree_util.tree_map(mix, current["group_params"],
+                                        result["group_params"])
+        all_one = jnp.all(weights == 1.0)
+        global_params = jax.tree_util.tree_map(
+            lambda res_g, g: jnp.where(all_one, res_g, jnp.mean(g, axis=0)),
+            result["global_params"], groups)
+        return dict(group_params=groups, global_params=global_params,
+                    group_delta=result["group_delta"],
+                    membership=membership, aux=aux)
+
+    return fold_fn
+
+
+def make_param_fold():
+    """Returns fold_fn(current_groups, result_groups, result_global,
+    weights) -> (folded_groups, folded_global) — the carry-less staleness
+    fold of the *streamed* async path, where membership / FeSEM rows stay
+    host-resident and only the m-stacked group parameters live on device.
+    Same mixing semantics as ``make_staleness_fold`` (w == 1.0 is a
+    bitwise passthrough, matching the synchronous per-round adoption
+    ``group_params = out.group_params; params = out.global_params``)."""
+    def fold_fn(current_groups, result_groups, result_global, weights):
+        mix = _mix_weighted(weights)
+        groups = jax.tree_util.tree_map(mix, current_groups, result_groups)
+        all_one = jnp.all(weights == 1.0)
+        folded_global = jax.tree_util.tree_map(
+            lambda res_g, g: jnp.where(all_one, res_g, jnp.mean(g, axis=0)),
+            result_global, groups)
+        return groups, folded_global
+
+    return fold_fn
+
+
 def serial_reference_round(batch_solver, group_params_list, membership,
                            X, Y, n, keys, *, eta_g: float = 0.0):
     """The seed per-group round loop — m solver dispatches plus host-side

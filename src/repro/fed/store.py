@@ -407,6 +407,18 @@ class ClientStateTable:
         self.membership = np.full(self.n_clients, -1, np.int64)
         self._local_flat = None
         self._pretrain_dir = None
+        self.group_version = None      # (m,) int64 per-group staleness clock
+
+    # -- per-group staleness clocks (async runtime) -------------------------
+    def init_group_version(self, m: int) -> np.ndarray:
+        """Lazily create (and share by reference with the trainer, like
+        ``membership``) the per-group version counters the async runtime's
+        staleness weighting reads: version[g] increments every time a fold
+        lands clients in group g, and a dispatch's staleness is the gap
+        between the clock at stage time and at fold time."""
+        if self.group_version is None:
+            self.group_version = np.zeros(int(m), np.int64)
+        return self.group_version
 
     # -- cold flags --------------------------------------------------------
     def cold_mask(self) -> np.ndarray:

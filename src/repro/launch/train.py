@@ -67,15 +67,30 @@ def run_fed(args) -> int:
                     local_epochs=args.epochs, batch_size=args.batch,
                     lr=args.lr, mu=args.mu, n_groups=args.groups,
                     pretrain_scale=args.alpha, eta_g=args.eta_g,
-                    measure=args.measure, seed=args.seed)
+                    measure=args.measure, seed=args.seed,
+                    async_depth=args.async_depth,
+                    async_alpha=args.async_alpha,
+                    async_beta=args.async_beta)
     tr = frameworks[args.framework](model, data, cfg)
     print(f"# {args.framework} on {data.name}: {data.n_clients} clients, "
-          f"m={cfg.n_groups}, K={cfg.clients_per_round}, E={cfg.local_epochs}")
+          f"m={cfg.n_groups}, K={cfg.clients_per_round}, E={cfg.local_epochs}"
+          + (f", async_depth={cfg.async_depth}" if cfg.async_depth else ""))
     t0 = time.time()
-    for t in range(cfg.n_rounds):
-        m = tr.round(t)
-        print(f"round {t:3d} acc={m.weighted_acc:.4f} "
-              f"disc={m.discrepancy:.4f} ({time.time()-t0:.1f}s)")
+    if cfg.async_depth:
+        # async mode folds FIFO inside run(); report per-fold metrics after
+        tr.run(cfg.n_rounds)
+        for t, m in enumerate(tr.history.rounds):
+            print(f"round {t:3d} acc={m.weighted_acc:.4f} "
+                  f"disc={m.discrepancy:.4f}")
+        st = tr.history.async_stats
+        print(f"async: folds={st.get('folds')} "
+              f"max_in_flight={st.get('max_in_flight')} "
+              f"staleness={st.get('staleness_hist')} ({time.time()-t0:.1f}s)")
+    else:
+        for t in range(cfg.n_rounds):
+            m = tr.round(t)
+            print(f"round {t:3d} acc={m.weighted_acc:.4f} "
+                  f"disc={m.discrepancy:.4f} ({time.time()-t0:.1f}s)")
     print(f"max_acc={tr.history.max_acc:.4f}")
     if args.out:
         os.makedirs(args.out, exist_ok=True)
@@ -146,6 +161,13 @@ def main(argv=None) -> int:
     ap.add_argument("--eta-g", type=float, default=0.0, dest="eta_g")
     ap.add_argument("--measure", choices=("edc", "madc"), default="edc")
     ap.add_argument("--clients", type=int, default=None)
+    ap.add_argument("--async-depth", type=int, default=0, dest="async_depth",
+                    help="D>0 keeps D in-flight cohort dispatches, folded "
+                         "with FedAsync staleness weights (0 = synchronous)")
+    ap.add_argument("--async-alpha", type=float, default=1.0,
+                    dest="async_alpha")
+    ap.add_argument("--async-beta", type=float, default=0.0,
+                    dest="async_beta")
     # lm args
     ap.add_argument("--arch", default="gemma-2b")
     ap.add_argument("--smoke", action="store_true")

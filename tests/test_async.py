@@ -1,0 +1,519 @@
+"""Staleness-aware async runtime: weight math, the D=1 equivalence mode
+(bit-identical to the synchronous paths, pinned and streamed), depth > 1
+degradation accounting, cohort leases (expiry / requeue / retry cap),
+mid-async kill-and-resume, checkpoint format versioning, the bounded-retry
+state writer, and the Population.stats lifecycle.
+
+The load-bearing guarantees:
+
+  * ``async_depth=1`` with ``async_alpha=1, async_beta=0`` is BIT-identical
+    to the synchronous engine for all four frameworks — same History, same
+    parameters, same rng stream, same communication accounting — pinned
+    (vs the scan-fused block path) and streamed (vs the per-round path).
+  * at depth > 1 every fold is staleness-weighted per group
+    (w = α·(s+1)^-β on the per-group version clocks) and the degradation
+    record (dispatches / folds / max_in_flight / staleness histogram /
+    lease expiries / requeues) surfaces in ``History.async_stats``.
+  * an expired cohort lease is requeued with capped exponential backoff
+    and its re-dispatch folds as a LATER round; ``async_max_retries``
+    bounds the retries with a clear error.
+  * a checkpoint cadence crossing drains the in-flight window first, so
+    kill-and-resume mid-async replays bit-identically.
+"""
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.core.fedgroup import FedGroupTrainer
+from repro.data.generators import mnist_like
+from repro.fed import rounds as rounds_lib
+from repro.fed.engine import FedAvgTrainer, FedConfig
+from repro.fed.fesem import FeSEMTrainer
+from repro.fed.ifca import IFCATrainer
+from repro.fed.population import (FaultConfig, FaultSpec, Population,
+                                  PopulationConfig, _AsyncStateWriter)
+from repro.fed.store import ArrayClientStore
+
+N_CLIENTS = 40
+ALL_TRAINERS = [FedAvgTrainer, FedGroupTrainer, IFCATrainer, FeSEMTrainer]
+STREAM_KW = dict(initial_active=30, arrival_rate=2.0, prefetch=2)
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    return mnist_like(seed=0, n_clients=N_CLIENTS, classes_per_client=2,
+                      total_train=2000, dim=16)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    from repro.models.paper_models import mclr
+    return mclr(16, 10)
+
+
+def _cfg(**kw):
+    base = dict(n_rounds=4, clients_per_round=8, local_epochs=2,
+                batch_size=5, lr=0.05, n_groups=3, pretrain_scale=4, seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _fresh(cls, model, data, streamed, **cfg_kw):
+    cfg = _cfg(**cfg_kw)
+    if streamed:
+        pop = Population(ArrayClientStore(data),
+                         PopulationConfig(**STREAM_KW))
+        return cls(model, None, cfg, population=pop)
+    return cls(model, data, cfg)
+
+
+def _assert_tree_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _tree_finite(tree) -> bool:
+    return all(np.isfinite(np.asarray(leaf)).all()
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
+def _state(tr) -> dict:
+    """Everything the D=1 equivalence mode must reproduce bit-for-bit."""
+    s = {"params": tr.params, "key": tr.key,
+         "comm": np.asarray(tr.comm_params)}
+    mem = getattr(tr, "membership", None)
+    if mem is not None:
+        s["membership"] = np.array(mem)
+    for name in ("group_params", "group_delta", "local_flat"):
+        v = getattr(tr, name, None)
+        if v is not None:
+            s[name] = v
+    if tr.population is not None and isinstance(tr, FeSEMTrainer):
+        s["local_flat"] = np.asarray(
+            tr.population.gather_local_flat(np.arange(N_CLIENTS)))
+    return s
+
+
+def _bitwise_equal(a, b) -> bool:
+    a, b = np.asarray(a), np.asarray(b)
+    return a.shape == b.shape and a.tobytes() == b.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# FedAsync mixing weight w = alpha * (s + 1)^(-beta)
+# ---------------------------------------------------------------------------
+class TestStalenessWeight:
+    def test_zero_staleness_is_exactly_alpha(self):
+        for alpha in (1.0, 0.8, 0.25):
+            for beta in (0.0, 0.5, 2.0):
+                w = rounds_lib.staleness_weight(np.zeros(3, np.int64),
+                                                alpha=alpha, beta=beta)
+                np.testing.assert_array_equal(w, np.float32(alpha))
+
+    def test_monotone_non_increasing_in_staleness(self):
+        s = np.arange(0, 16, dtype=np.int64)
+        for beta in (0.0, 0.3, 1.0, 4.0):
+            w = rounds_lib.staleness_weight(s, alpha=0.9, beta=beta)
+            assert (np.diff(w) <= 0).all()
+            assert (w > 0).all()
+
+    def test_equivalence_mode_is_exactly_one(self):
+        # alpha=1, beta=0: the D=1 passthrough mode — EXACTLY 1.0, every s
+        w = rounds_lib.staleness_weight(np.array([0, 1, 7, 1000]),
+                                        alpha=1.0, beta=0.0)
+        assert w.dtype == np.float32
+        np.testing.assert_array_equal(w, np.ones(4, np.float32))
+
+    def test_negative_staleness_raises(self):
+        with pytest.raises(ValueError, match="negative staleness"):
+            rounds_lib.staleness_weight(np.array([0, -1]))
+
+
+# ---------------------------------------------------------------------------
+# fold math: w == 1 is a bitwise passthrough, w < 1 a convex mix
+# ---------------------------------------------------------------------------
+class TestFoldMath:
+    def test_param_fold_weight_one_is_bitwise_passthrough(self):
+        # 0*cur + 1*res is NOT bit-exact when cur holds -0.0 / inf / nan —
+        # the fold must select, not mix
+        fold = rounds_lib.make_param_fold()
+        cur = {"w": jnp.asarray([[-0.0, np.inf], [np.nan, 1.0]],
+                                jnp.float32)}
+        res = {"w": jnp.asarray([[1.0, 2.0], [3.0, 4.0]], jnp.float32)}
+        res_g = {"w": jnp.asarray([2.0, 3.0], jnp.float32)}
+        groups, glob = fold(cur, res, res_g, jnp.ones(2, jnp.float32))
+        assert _bitwise_equal(groups["w"], res["w"])
+        assert _bitwise_equal(glob["w"], res_g["w"])
+
+    def test_param_fold_half_weight_mix_and_global_mean(self):
+        fold = rounds_lib.make_param_fold()
+        cur = {"w": jnp.asarray([[0.0, 4.0], [2.0, 2.0]], jnp.float32)}
+        res = {"w": jnp.asarray([[2.0, 0.0], [4.0, 6.0]], jnp.float32)}
+        res_g = {"w": jnp.asarray([99.0, 99.0], jnp.float32)}
+        groups, glob = fold(cur, res, res_g,
+                            jnp.asarray([0.5, 0.5], jnp.float32))
+        np.testing.assert_allclose(np.asarray(groups["w"]),
+                                   [[1.0, 2.0], [3.0, 4.0]])
+        # weighted mode ignores the dispatch's own auxiliary global model:
+        # the folded global is the mean of the folded groups
+        np.testing.assert_allclose(np.asarray(glob["w"]), [2.0, 3.0])
+
+    def test_param_fold_per_group_weights(self):
+        fold = rounds_lib.make_param_fold()
+        cur = {"w": jnp.asarray([[0.0], [0.0]], jnp.float32)}
+        res = {"w": jnp.asarray([[8.0], [8.0]], jnp.float32)}
+        groups, _ = fold(cur, res, {"w": jnp.zeros(1, jnp.float32)},
+                         jnp.asarray([1.0, 0.25], jnp.float32))
+        np.testing.assert_allclose(np.asarray(groups["w"]), [[8.0], [2.0]])
+
+    def test_staleness_fold_scatters_only_alive_cohort_rows(self):
+        # dead lanes are redirected to the trash row; an untouched client's
+        # membership must keep the CURRENT value even if the dispatch
+        # result's snapshot of it is older
+        fold = rounds_lib.make_staleness_fold()
+        mk = lambda mem: dict(
+            group_params={"w": jnp.zeros((2, 2), jnp.float32)},
+            global_params={"w": jnp.zeros(2, jnp.float32)},
+            group_delta=jnp.zeros((2, 3), jnp.float32),
+            membership=jnp.asarray(mem, jnp.int32), aux=None)
+        cur = mk([5, 5, 5, 5, 0])              # 4 clients + trash row
+        res = mk([7, 7, 7, 7, 0])
+        out = fold(cur, res, jnp.asarray([0, 2], jnp.int32),
+                   jnp.asarray([1.0, 0.0], jnp.float32),
+                   jnp.ones(2, jnp.float32))
+        mem = np.asarray(out["membership"])
+        assert mem[0] == 7                     # alive cohort lane adopted
+        assert mem[2] == 5                     # dead lane NOT adopted
+        assert mem[1] == 5 and mem[3] == 5     # untouched clients
+
+
+# ---------------------------------------------------------------------------
+# D=1 equivalence mode: bit-identical to the synchronous engine
+# ---------------------------------------------------------------------------
+class TestEquivalencePinned:
+    @pytest.mark.parametrize("cls", ALL_TRAINERS,
+                             ids=lambda c: c.framework)
+    def test_depth1_bitwise_vs_block_path(self, cls, small_model,
+                                          small_data):
+        sync = _fresh(cls, small_model, small_data, False, block_size=4)
+        h_sync = sync.run(4)
+        asy = _fresh(cls, small_model, small_data, False, async_depth=1)
+        h_asy = asy.run(4)
+        assert h_asy.rounds == h_sync.rounds
+        _assert_tree_equal(_state(asy), _state(sync))
+        st = h_asy.async_stats
+        assert st["dispatches"] == st["folds"] == 4
+        assert st["max_in_flight"] == 1
+        assert st["lease_expiries"] == 0 and st["requeues"] == 0
+        assert st["staleness_hist"] == {"0": 4}
+
+
+class TestEquivalenceStreamed:
+    @pytest.mark.parametrize("cls", ALL_TRAINERS,
+                             ids=lambda c: c.framework)
+    def test_depth1_bitwise_vs_round_path(self, cls, small_model,
+                                          small_data):
+        sync = _fresh(cls, small_model, small_data, True)
+        h_sync = sync.run(4)
+        s_sync = _state(sync)
+        sync.close()
+        asy = _fresh(cls, small_model, small_data, True, async_depth=1)
+        h_asy = asy.run(4)
+        s_asy = _state(asy)
+        asy.close()
+        assert h_asy.rounds == h_sync.rounds
+        _assert_tree_equal(s_asy, s_sync)
+        assert h_asy.async_stats["staleness_hist"] == {"0": 4}
+
+
+# ---------------------------------------------------------------------------
+# depth > 1: staleness accounting and weighted folds
+# ---------------------------------------------------------------------------
+class TestAsyncDepth:
+    def test_depth2_pinned_staleness_accounting(self, small_model,
+                                                small_data):
+        tr = _fresh(FedGroupTrainer, small_model, small_data, False,
+                    async_depth=2, async_alpha=0.8, async_beta=0.5)
+        h = tr.run(6)
+        assert [r.round for r in h.rounds] == list(range(6))
+        assert _tree_finite(tr.params) and _tree_finite(tr.group_params)
+        st = h.async_stats
+        assert st["dispatches"] == st["folds"] == 6
+        assert st["max_in_flight"] == 2
+        assert sum(st["staleness_hist"].values()) == 6
+        # with two dispatches in flight, some fold saw staleness >= 1
+        assert any(int(k) >= 1 for k in st["staleness_hist"])
+        # per-group clocks advanced
+        assert tr.group_version is not None and tr.group_version.sum() > 0
+
+    def test_depth2_streamed_stays_finite(self, small_model, small_data):
+        tr = _fresh(FedAvgTrainer, small_model, small_data, True,
+                    async_depth=2, async_alpha=0.9, async_beta=0.5)
+        h = tr.run(5)
+        tr.close()
+        assert len(h.rounds) == 5
+        assert _tree_finite(tr.params)
+        assert h.async_stats["max_in_flight"] == 2
+
+
+# ---------------------------------------------------------------------------
+# cohort leases: expiry -> requeue with capped backoff -> bounded retries
+# ---------------------------------------------------------------------------
+class TestLeases:
+    def test_expired_lease_requeues_and_folds_later(self, small_model,
+                                                    small_data):
+        tr = _fresh(FedAvgTrainer, small_model, small_data, False,
+                    async_depth=2, async_backoff=0.01,
+                    async_backoff_cap=0.02)
+        real_wait = tr._wait_ready
+        kill = {"n": 1}
+
+        def scripted(lease):
+            if kill["n"] > 0 and lease.attempts == 0:
+                kill["n"] -= 1        # script exactly one lease expiry
+                return False
+            return real_wait(lease)
+
+        tr._wait_ready = scripted
+        h = tr.run(4)
+        st = h.async_stats
+        assert st["lease_expiries"] == 1 and st["requeues"] == 1
+        # the abandoned cohort was re-dispatched: one extra dispatch,
+        # but every round still folded exactly once, in order
+        assert st["dispatches"] == 5 and st["folds"] == 4
+        assert [r.round for r in h.rounds] == [0, 1, 2, 3]
+        assert _tree_finite(tr.params)
+
+    def test_retries_exhausted_raises(self, small_model, small_data):
+        tr = _fresh(FedAvgTrainer, small_model, small_data, False,
+                    async_depth=1, async_max_retries=1,
+                    async_backoff=0.001, async_backoff_cap=0.002)
+        tr._wait_ready = lambda lease: False      # never completes
+        with pytest.raises(RuntimeError, match="unrecoverable"):
+            tr.run(2)
+        # the doomed cohort expired at least twice (original + retry);
+        # fresh cohorts staged in between may add expiries of their own
+        assert tr.history.async_stats["lease_expiries"] >= 2
+
+    def test_ready_result_is_never_expired(self, small_model, small_data):
+        # readiness is checked before the deadline: an already-computed
+        # result folds even under an absurdly tight lease timeout
+        tr = _fresh(FedAvgTrainer, small_model, small_data, False,
+                    async_depth=1, async_lease_timeout=1e-9)
+        real_wait = tr._wait_ready
+
+        def settled(lease):
+            jax.block_until_ready(lease.result)   # result already computed
+            return real_wait(lease)
+
+        tr._wait_ready = settled
+        h = tr.run(2)
+        assert h.async_stats["lease_expiries"] == 0
+        assert len(h.rounds) == 2
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume mid-async: drain-to-quiescence checkpoints
+# ---------------------------------------------------------------------------
+class TestKillResumeAsync:
+    @pytest.mark.parametrize(
+        "cls,streamed", [(FedGroupTrainer, False), (FeSEMTrainer, True)],
+        ids=["fedgroup-pinned", "fesem-streamed"])
+    def test_mid_async_resume_is_bit_identical(self, cls, streamed,
+                                               small_model, small_data,
+                                               tmp_path):
+        kw = dict(async_depth=2, checkpoint_every=3)
+        ref = _fresh(cls, small_model, small_data, streamed,
+                     checkpoint_dir=str(tmp_path / "ref"), **kw)
+        h_ref = ref.run(8)
+        s_ref = _state(ref)
+        ref.close()
+
+        kill_dir = str(tmp_path / "kill")
+        killed = _fresh(cls, small_model, small_data, streamed,
+                        checkpoint_dir=kill_dir, **kw)
+        killed.run(5)                  # "killed" after 5 folded rounds
+        killed.close()
+        # the cadence crossing at t=3 drains the one in-flight dispatch
+        # (depth 2) before snapshotting, so the quiescent archive is t=4
+        assert os.path.exists(ckpt_io.checkpoint_path(kill_dir, 4))
+
+        resumed = _fresh(cls, small_model, small_data, streamed,
+                         checkpoint_dir=kill_dir, **kw)
+        t = resumed.load_checkpoint(kill_dir)
+        assert t == 4
+        h_res = resumed.run(8 - t)
+        s_res = _state(resumed)
+        resumed.close()
+
+        assert h_res.rounds == h_ref.rounds
+        assert h_res.async_stats["staleness_hist"] == \
+            h_ref.async_stats["staleness_hist"]
+        _assert_tree_equal(s_res, s_ref)
+        np.testing.assert_array_equal(resumed.group_version,
+                                      ref.group_version)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint format versioning (checkpoint/io.py)
+# ---------------------------------------------------------------------------
+class TestCheckpointFormat:
+    def _write_archive(self, path, meta: dict):
+        with open(path, "wb") as f:
+            np.savez(f, __meta__=json.dumps(meta), a=np.zeros(2))
+
+    def test_unversioned_archive_reads_as_v1_and_fails_clearly(
+            self, tmp_path):
+        # archives written before versioning existed carry no format key
+        path = str(tmp_path / "legacy.npz")
+        self._write_archive(path, {"t": 3})
+        with pytest.raises(ckpt_io.CheckpointFormatError,
+                           match="format version 1, expected 2"):
+            ckpt_io.load_metadata(path)
+
+    def test_version_checked_before_template_matching(self, tmp_path):
+        # a v1 file with mismatched keys must fail on the VERSION, not with
+        # a raw key-mismatch traceback
+        path = str(tmp_path / "legacy.npz")
+        self._write_archive(path, {"t": 3})
+        with pytest.raises(ckpt_io.CheckpointFormatError):
+            ckpt_io.load_pytree(path, {"different": np.zeros(7)})
+
+    def test_future_version_rejected(self, tmp_path):
+        path = str(tmp_path / "future.npz")
+        self._write_archive(path, {ckpt_io._FORMAT_KEY: 99})
+        with pytest.raises(ckpt_io.CheckpointFormatError,
+                           match="format version 99"):
+            ckpt_io.load_metadata(path)
+
+    def test_current_version_roundtrips_and_strips_key(self, tmp_path):
+        path = str(tmp_path / "ck.npz")
+        ckpt_io.save_pytree(path, {"a": np.ones(2)}, {"note": "x"})
+        meta = ckpt_io.load_metadata(path)
+        assert meta == {"note": "x"}          # format key is internal
+        assert ckpt_io.CheckpointFormatError.__mro__[1] is ValueError
+
+
+# ---------------------------------------------------------------------------
+# bounded-retry async state writer
+# ---------------------------------------------------------------------------
+class TestWriterRetry:
+    def test_transient_failures_recover_with_backoff(self):
+        w = _AsyncStateWriter(timeout=5.0, max_retries=3, backoff=0.001,
+                              backoff_cap=0.01)
+        calls = {"n": 0}
+
+        def flaky():
+            calls["n"] += 1
+            if calls["n"] <= 2:
+                raise OSError("transient")
+
+        w.submit(flaky, label="flaky-scatter")
+        w.drain()                    # recovers — no error surfaced
+        w.close()
+        assert calls["n"] == 3
+        assert w.retries == 2        # feeds Population.stats writer_retries
+
+    def test_exhausted_retries_surface_in_drain(self):
+        w = _AsyncStateWriter(timeout=5.0, max_retries=1, backoff=0.001)
+        calls = {"n": 0}
+
+        def broken():
+            calls["n"] += 1
+            raise OSError("disk gone")
+
+        w.submit(broken)
+        with pytest.raises(RuntimeError, match="write failed") as ei:
+            w.drain()
+        w.close()
+        assert calls["n"] == 2       # original attempt + 1 retry
+        assert isinstance(ei.value.__cause__, OSError)
+
+    def test_success_without_retries_counts_zero(self):
+        w = _AsyncStateWriter(timeout=5.0)
+        w.submit(lambda: None)
+        w.drain()
+        w.close()
+        assert w.retries == 0
+
+
+# ---------------------------------------------------------------------------
+# Population.stats lifecycle: reset per run(), checkpointed, restored
+# ---------------------------------------------------------------------------
+class TestStatsLifecycle:
+    def test_stats_reset_between_runs(self, small_model, small_data):
+        faults = FaultConfig(rounds={1: FaultSpec(kill=5)})
+        pop = Population(ArrayClientStore(small_data),
+                         PopulationConfig(faults=faults))
+        tr = FedAvgTrainer(small_model, None, _cfg(), population=pop)
+        tr.run(2)
+        assert pop.stats["killed_clients"] == 5
+        tr.run(2)            # rounds 2-3: no faults scripted there
+        tr.close()
+        assert pop.stats["killed_clients"] == 0    # fresh run, fresh stats
+
+    def test_reset_stats_zeroes_every_counter(self, small_data):
+        pop = Population(ArrayClientStore(small_data), PopulationConfig())
+        pop.stats["lease_expiries"] = 7
+        pop.stats["requeues"] = 3
+        pop.reset_stats()
+        assert all(v == 0 for v in pop.stats.values())
+        pop.close()
+
+    def test_restored_stats_survive_resume(self, small_model, small_data,
+                                           tmp_path):
+        faults = FaultConfig(rounds={1: FaultSpec(kill=4)})
+        ck = dict(checkpoint_every=2, checkpoint_dir=str(tmp_path))
+        pop = Population(ArrayClientStore(small_data),
+                         PopulationConfig(faults=faults))
+        tr = FedAvgTrainer(small_model, None, _cfg(**ck), population=pop)
+        tr.run(2)
+        tr.close()
+
+        pop2 = Population(ArrayClientStore(small_data),
+                          PopulationConfig(faults=faults))
+        tr2 = FedAvgTrainer(small_model, None, _cfg(**ck), population=pop2)
+        assert tr2.load_checkpoint(str(tmp_path)) == 2
+        assert pop2.stats["killed_clients"] == 4   # restored from the meta
+        tr2.run(2)           # resumed run keeps the restored totals
+        tr2.close()
+        assert pop2.stats["killed_clients"] == 4
+
+
+# ---------------------------------------------------------------------------
+# full straggler-trace matrix — slow, opt-in (REPRO_SLOW=1)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.skipif(not os.environ.get("REPRO_SLOW"),
+                    reason="full straggler matrix: set REPRO_SLOW=1")
+class TestSlowStragglerMatrix:
+    @pytest.mark.parametrize("depth", [2, 4])
+    @pytest.mark.parametrize("cls", ALL_TRAINERS,
+                             ids=lambda c: c.framework)
+    def test_async_under_straggler_trace(self, cls, depth, small_model,
+                                         small_data):
+        faults = FaultConfig(rounds={1: FaultSpec(straggle=0.3),
+                                     3: FaultSpec(kill=3),
+                                     5: FaultSpec(straggle=0.3)})
+        pop = Population(ArrayClientStore(small_data),
+                         PopulationConfig(faults=faults, **STREAM_KW))
+        tr = cls(small_model, None,
+                 _cfg(async_depth=depth, async_alpha=0.8, async_beta=0.5),
+                 population=pop)
+        h = tr.run(8)
+        tr.close()
+        assert len(h.rounds) == 8
+        assert _tree_finite(tr.params)
+        st = h.async_stats
+        assert st["folds"] == 8
+        assert st["max_in_flight"] <= depth
+        assert sum(st["staleness_hist"].values()) == 8
