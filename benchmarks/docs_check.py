@@ -26,9 +26,10 @@ import re
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 DOCUMENTED_MODULES = ("repro.fed.store", "repro.fed.population",
-                      "repro.fed.parallel", "repro.sharding.specs")
+                      "repro.fed.parallel", "repro.sharding.specs",
+                      "repro.obs.trace", "repro.obs.metrics")
 DOC_FILES = ("README.md", "docs/architecture.md", "docs/scaling.md",
-             "docs/benchmarks.md")
+             "docs/benchmarks.md", "docs/observability.md")
 
 # inline-code tokens that count as repo path references: plain path chars
 # only (rules out prose like `m=5/K=50`), and either a known file

@@ -1,0 +1,102 @@
+"""Benchmark: telemetry-layer overhead + schema self-lint.
+
+Two obs metrics, persisted to BENCH_obs.json (>2x regression gate in
+benchmarks/run.py, always included under --quick):
+
+  * ``obs_overhead``: interleaved wall ratio of the fused round with FULL
+    telemetry (span tracer + JSONL round stream into a telemetry dir)
+    over the same round with telemetry disabled (watched "max" — the
+    acceptance budget is ~1.05x; spans cost two ``perf_counter_ns`` calls
+    and a ring append, the stream one small ``write`` per round).
+  * ``schema_violations``: ``launch/inspect.py --check`` run against the
+    bench's OWN telemetry output (trace.json + metrics.jsonl +
+    run_summary.json) — the bench lints what it just produced, so a
+    schema drift in the emitters trips the gate here before any consumer
+    sees it. Must be 0.
+
+The disabled path is additionally asserted to be a structural no-op:
+``Telemetry().span(...)`` returns the shared ``NULL_SPAN`` singleton and
+the ring buffer stays empty — "telemetry off" costs one attribute check
+per span site, not a record.
+
+Schema + gate semantics: docs/benchmarks.md; span/metric inventory:
+docs/observability.md.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+from benchmarks.bench_io import interleaved_best, record_run
+from repro.data.generators import mnist_like
+from repro.fed.engine import FedAvgTrainer, FedConfig
+from repro.launch.inspect import check_dir
+from repro.models.paper_models import mclr
+from repro.obs import NULL_SPAN, Telemetry
+from repro.obs import telemetry as obs_telemetry
+
+
+def _cfg(**kw) -> FedConfig:
+    base = dict(clients_per_round=8, local_epochs=2, batch_size=5, lr=0.05,
+                n_groups=3, pretrain_scale=4, seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _data():
+    return mnist_like(seed=0, n_clients=40, classes_per_client=2,
+                      total_train=2000, dim=16)
+
+
+def _assert_disabled_noop():
+    tel = Telemetry()                       # fresh, disabled
+    assert tel.span("stage", t=0) is NULL_SPAN, \
+        "disabled Telemetry.span must return the NULL_SPAN singleton"
+    with tel.span("stage", t=0):
+        pass
+    assert tel.tracer.records() == [], \
+        "disabled tracer must not record spans"
+    assert not tel.recording, "no sink configured => not recording"
+
+
+def main(quick: bool = False):
+    model, data = mclr(16, 10), _data()
+    reps = 4 if quick else 10
+    _assert_disabled_noop()
+
+    tdir = tempfile.mkdtemp(prefix="bench_obs_")
+    # the harness (benchmarks/run.py) installs a process-default telemetry
+    # whose tracer would leak into the "disabled" trainer via from_config
+    # — suspend it so the off-path really is off
+    saved = obs_telemetry.get_default()
+    obs_telemetry.set_default(None)
+    try:
+        off = FedAvgTrainer(model, data, _cfg())
+        on = FedAvgTrainer(model, data, _cfg(telemetry_dir=tdir))
+        assert not off.obs.enabled and on.obs.enabled and on.obs.recording
+        t_off, t_on = interleaved_best(
+            [lambda: off.run(2), lambda: on.run(2)], reps=reps)
+        overhead = t_on / max(t_off, 1e-9)
+        kinds = sorted({r.kind for r in on.obs.tracer.records()})
+        on.close()                          # writes trace.json + summary
+        off.close()
+        errors = check_dir(tdir)            # lint our own telemetry output
+        if errors:
+            raise AssertionError(
+                "telemetry schema violations in bench output: " +
+                "; ".join(errors))
+    finally:
+        obs_telemetry.set_default(saved)
+        shutil.rmtree(tdir, ignore_errors=True)
+
+    metrics = {"quick": quick, "reps": reps,
+               "t_off_us": t_off, "t_on_us": t_on,
+               "obs_overhead": overhead,
+               "span_kinds": kinds,
+               "schema_violations": len(errors)}
+    regression, details = record_run(
+        "BENCH_obs.json", metrics, watch=[("obs_overhead", "max")])
+    return {"obs_overhead": round(overhead, 3),
+            "span_kinds": ",".join(kinds),
+            "schema_violations": len(errors),
+            "regression": regression, "regression_details": details}

@@ -18,6 +18,9 @@
   async      staleness-aware async runtime: async-vs-sync throughput
              under a straggler trace + the D=1 equivalence mode's
              overhead (BENCH_async.json)
+  obs        telemetry layer: enabled-vs-disabled overhead on the fused
+             round + schema self-lint of the bench's own telemetry dir
+             via launch/inspect.py --check (BENCH_obs.json)
   docs       docs freshness: module doctests + README/docs path existence
   fig5       EDC vs MADC linearity             (paper Fig. 5)
   cost       clustering-measure cost           (paper §3.3 complexity claim)
@@ -35,7 +38,8 @@ executor speedups; round_block the blocked-vs-per-round speedup; mesh2d
 the 2-D/1-D round-time ratio; population the streamed-vs-pinned
 round-time ratio and the prefetch-overlap speedup; robustness the
 checkpoint overhead, quarantine efficacy and deadline saving; async the
-async-vs-sync throughput and the D=1 equivalence-mode overhead) —
+async-vs-sync throughput and the D=1 equivalence-mode overhead; obs the
+enabled-vs-disabled telemetry overhead on the fused round) —
 docs/benchmarks.md documents the BENCH_*.json schema and the gate
 semantics. Gate failures print a per-entry diff — which bench, crash vs
 watched-metric regression, best recorded -> measured — before the nonzero
@@ -44,7 +48,11 @@ population, robustness and docs suites, even under ``--only``:
 
 ``python -m benchmarks.run --quick --only cost,table3``  — the CI perf gate
 (effectively
-cost,table3,round_exec,round_block,mesh2d,population,robustness,async,docs)
+cost,table3,round_exec,round_block,mesh2d,population,robustness,async,obs,docs)
+
+The harness installs a process-default telemetry (``repro.obs``), so the
+``--json`` report carries per-bench per-stage span attribution under each
+entry's ``"stages"`` key — the run inspector's breakdown, per bench.
 """
 from __future__ import annotations
 
@@ -57,10 +65,11 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import (async_bench, clustering_cost, docs_check,
-                        eta_g_sweep, fig5_edc_madc, mesh2d,
+                        eta_g_sweep, fig5_edc_madc, mesh2d, obs_bench,
                         population_bench, robustness_bench, roofline,
                         round_block, table1_heterogeneity,
                         table3_frameworks)
+from repro.obs import telemetry as obs_telemetry
 
 BENCHES = {
     "table1": table1_heterogeneity.main,
@@ -71,6 +80,7 @@ BENCHES = {
     "population": population_bench.main,
     "robustness": robustness_bench.main,
     "async": async_bench.main,
+    "obs": obs_bench.main,
     "docs": docs_check.main,
     "fig5": fig5_edc_madc.main,
     "cost": clustering_cost.main,
@@ -94,18 +104,25 @@ def main(argv=None) -> int:
     if args.quick:
         # the CI gate must always exercise the round-executor, round-block,
         # 2-D mesh, population (streamed cohort), robustness (faults /
-        # checkpoint / deadline) and async (staleness runtime) suites +
-        # the docs check
+        # checkpoint / deadline), async (staleness runtime) and obs
+        # (telemetry overhead) suites + the docs check
         for required in ("round_exec", "round_block", "mesh2d",
-                         "population", "robustness", "async", "docs"):
+                         "population", "robustness", "async", "obs",
+                         "docs"):
             if required not in names:
                 names.append(required)
+    # process-default telemetry: trainers/populations the benches build
+    # share this tracer (never its registry — repro.obs.from_config), so
+    # the report gets the inspector's per-stage breakdown PER BENCH
+    tel = obs_telemetry.Telemetry(enabled=True)
+    obs_telemetry.set_default(tel)
     print("name,us_per_call,derived")
     rc = 0
     report = {}
     failures = []
     for name in names:
         t0 = time.perf_counter()
+        tel.tracer.clear()
         try:
             derived = BENCHES[name](quick=args.quick)
         except Exception as e:  # noqa: BLE001
@@ -126,8 +143,10 @@ def main(argv=None) -> int:
                 rc = 1
         elif isinstance(derived, list):
             short = f"rows={len(derived)}"
-        report[name] = {"us_per_call": us, "derived": derived}
+        report[name] = {"us_per_call": us, "derived": derived,
+                        "stages": tel.tracer.stage_totals()}
         print(f"{name},{us:.0f},{short}")
+    obs_telemetry.set_default(None)
     if failures:
         # per-entry diff instead of a bare nonzero exit: which bench, crash
         # vs watched-metric regression, best recorded value -> measured

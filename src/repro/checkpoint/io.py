@@ -34,11 +34,15 @@ _CKPT_RE = re.compile(r"ckpt_(\d+)\.npz$")
 # Archive format version, bumped whenever the checkpoint schema changes
 # (v1: PR-6 fault-tolerant runtime; v2: async runtime — per-group staleness
 # clocks, async degradation counters and population fault/lease stats in
-# the metadata). Stored inside the ``__meta__`` JSON; archives written
-# before versioning existed read back as v1. Loaders check the version
-# FIRST, so an old file fails with a clear "checkpoint format version X,
-# expected Y" error instead of a raw key/shape-mismatch traceback.
-CKPT_FORMAT_VERSION = 2
+# the metadata; v3: telemetry — the unified ``repro.obs`` metrics-registry
+# snapshot rides the metadata as ``"obs"``, replacing the scattered
+# ``async_stats`` dict, so every degradation counter survives
+# kill-and-resume through one surface). Stored inside the ``__meta__``
+# JSON; archives written before versioning existed read back as v1.
+# Loaders check the version FIRST, so an old file fails with a clear
+# "checkpoint format version X, expected Y" error instead of a raw
+# key/shape-mismatch traceback.
+CKPT_FORMAT_VERSION = 3
 _FORMAT_KEY = "__ckpt_format__"
 
 

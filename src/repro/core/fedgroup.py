@@ -111,7 +111,7 @@ class FedGroupTrainer(GroupedTrainer):
         else:
             raise ValueError(cfg.measure)
 
-        self.membership[pre_idx] = labels
+        self._adopt_membership(pre_idx, labels)
         # segment mean over pre-trained clients: W[j, i] = 1/|G_j| for
         # members, zero rows for empty groups (they stay at w0 with Δ = 0)
         W = np.zeros((self.m, n_pre), np.float32)
@@ -138,9 +138,11 @@ class FedGroupTrainer(GroupedTrainer):
         cfg = self.cfg
         if len(cold_idx) == 0:
             return
+        self.obs.registry.inc("rounds.cold_started", len(cold_idx))
         if cfg.rac:                                            # ablation
-            self.membership[cold_idx] = self.rng.integers(0, self.m,
-                                                          len(cold_idx))
+            self._adopt_membership(cold_idx,
+                                   self.rng.integers(0, self.m,
+                                                     len(cold_idx)))
             return
         x, y, n = self._client_batch(cold_idx)
         self.key, sk = jax.random.split(self.key)
@@ -153,7 +155,7 @@ class FedGroupTrainer(GroupedTrainer):
             self.population.state.set_pretrain_dir(cold_idx, np.asarray(dpre))
         sim = measures.cosine_similarity_matrix(dpre, self.group_delta)
         dis = (-sim + 1.0) / 2.0                               # (c, m)
-        self.membership[cold_idx] = np.asarray(jnp.argmin(dis, axis=1))
+        self._adopt_membership(cold_idx, np.asarray(jnp.argmin(dis, axis=1)))
 
     # ------------------------------------------------------------------
     # Round-block staging: blocks break on host events (Alg. 3 cold start,
@@ -227,6 +229,12 @@ class FedGroupTrainer(GroupedTrainer):
         self.last_cold = int(extra["last_cold"])
         if not extra["has_group_delta"]:
             self.group_delta = None
+
+    def _round_record(self, m) -> dict:
+        rec = super()._round_record(m)
+        rec["cold"] = int(self.last_cold)
+        rec["eta_g"] = float(self.cfg.eta_g)
+        return rec
 
     # ------------------------------------------------------------------
     # Round (Algorithm 2) — one fused dispatch over all groups

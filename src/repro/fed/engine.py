@@ -71,6 +71,7 @@ from repro.fed import parallel as parallel_lib
 from repro.fed import rounds as rounds_lib
 from repro.fed import server as server_lib
 from repro.models.paper_models import ModelSpec
+from repro.obs import telemetry as obs_lib
 
 
 @dataclass
@@ -124,6 +125,10 @@ class FedConfig:
     async_max_retries: int = 3
     async_backoff: float = 0.05
     async_backoff_cap: float = 1.0
+    # telemetry (repro.obs): setting a directory enables span tracing and
+    # streams per-round JSONL records + a Chrome trace + run_summary.json
+    # there (docs/observability.md); None leaves the tracer a no-op
+    telemetry_dir: str | None = None
 
 
 @dataclass
@@ -142,17 +147,25 @@ class History:
     record ``weighted_acc = nan``; the aggregates below ignore them (a NaN
     never satisfies ``>=``, and ``max_acc`` filters it explicitly).
 
-    ``async_stats`` is the async runtime's degradation record (empty on
+    ``async_stats`` is the async runtime's degradation record (all-zero on
     synchronous runs): dispatches / folds / max_in_flight / lease_expiries
     / requeues counters plus ``staleness_hist``, a {max-staleness:
-    fold-count} histogram. Checkpoints carry it, so a resumed run reports
-    totals consistent with an uninterrupted one."""
+    fold-count} histogram. Inside a trainer it is a registry-backed view
+    (``repro.obs.metrics``) over the ``async.*`` metrics — reads and
+    writes land in the unified registry, whose snapshot rides checkpoint
+    meta, so a resumed run reports totals consistent with an
+    uninterrupted one."""
 
     rounds: list = field(default_factory=list)
     async_stats: dict = field(default_factory=dict)
+    # engine hook fired on every add() — emits the per-round telemetry
+    # record from whichever path (round / block / async fold) added it
+    _on_add: object = field(default=None, repr=False, compare=False)
 
     def add(self, m: RoundMetrics):
         self.rounds.append(m)
+        if self._on_add is not None:
+            self._on_add(m)
 
     @property
     def max_acc(self) -> float:
@@ -231,20 +244,67 @@ class FedAvgTrainer:
         self.group_version = None   # (m,) per-group staleness clock (async)
         self._resumed = False       # load_checkpoint -> next run() keeps
                                     # restored Population.stats totals
+        self._last_staleness = None  # last async fold's max staleness /
+        self._last_weights = None    # per-group weights (round record)
         # client axis sharded over "data" on multi-device (None = plain
         # jit); REPRO_MODEL_AXIS>1 auto-builds the 2-D (data, model) mesh
         self.mesh = parallel_lib.default_fed_mesh() if mesh is None else mesh
         if population is not None:
             population.attach(cfg, self.mesh)
+            # one telemetry bundle per runtime: the population already owns
+            # one (its degradation counters live there) — share it
+            self.obs = population.obs
             self._train_stack = self._test_stack = None
         else:
             # pin the padded per-client stacks on device once — selection is
             # a device gather, not a fresh host->device upload every round
+            self.obs = obs_lib.from_config(cfg)
             self._train_stack = tuple(jnp.asarray(a) for a in
                                       (data.x_train, data.y_train,
                                        data.n_train))
             self._test_stack = tuple(jnp.asarray(a) for a in
                                      (data.x_test, data.y_test, data.n_test))
+        self._bind_history(self.history)
+
+    def _bind_history(self, h: History):
+        """Attach a History to the telemetry layer: ``async_stats`` becomes
+        the registry-backed view and every add() emits the round record."""
+        h.async_stats = self.obs.async_view()
+        h._on_add = self._emit_round
+        self.history = h
+
+    # -- telemetry (repro.obs) ---------------------------------------------
+    def _emit_round(self, m: RoundMetrics):
+        """History.add hook: registry counters + the streamed JSONL round
+        record. Record fields are deterministic functions of training state
+        (never wall time), so the stream is bit-stable across
+        kill-and-resume."""
+        reg = self.obs.registry
+        reg.inc("rounds.completed")
+        if not math.isnan(m.weighted_acc):
+            reg.inc("rounds.evals")
+        if m.quarantined:
+            reg.inc("rounds.quarantined", m.quarantined)
+        if self.obs.recording:
+            self.obs.round_record(self._round_record(m))
+
+    def _round_record(self, m: RoundMetrics) -> dict:
+        rec = {"kind": "round", "t": m.round, "acc": m.weighted_acc,
+               "loss": m.mean_loss, "disc": m.discrepancy,
+               "quarantined": m.quarantined}
+        if self.group_version is not None:
+            rec["group_version"] = [int(v) for v in self.group_version]
+        if self._last_staleness is not None:
+            rec["staleness"] = self._last_staleness
+            rec["weights"] = self._last_weights
+            self._last_staleness = self._last_weights = None
+        return rec
+
+    def _summary_extra(self) -> dict:
+        return {"framework": self.framework,
+                "rounds": len(self.history.rounds),
+                "max_acc": self.history.max_acc,
+                "comm_params": int(self.comm_params)}
 
     # -- single-dispatch round executor ------------------------------------
     def _exec_spec(self) -> dict:
@@ -261,8 +321,9 @@ class FedAvgTrainer:
                 batch_size=cfg.batch_size, lr=cfg.lr, mu=cfg.mu,
                 max_samples=self._max_samples, quarantine=cfg.quarantine,
                 quarantine_mult=cfg.quarantine_mult, **self._exec_spec())
-            self._round_exec = parallel_lib.make_sharded_executor(
-                fn, self.mesh)
+            self._round_exec = self.obs.wrap(
+                "dispatch", parallel_lib.make_sharded_executor(fn, self.mesh),
+                exec="round")
         return self._round_exec
 
     # -- scan-fused round blocks -------------------------------------------
@@ -279,8 +340,10 @@ class FedAvgTrainer:
                 batch_size=cfg.batch_size, lr=cfg.lr, mu=cfg.mu,
                 max_samples=self._max_samples, quarantine=cfg.quarantine,
                 quarantine_mult=cfg.quarantine_mult, **self._block_kwargs())
-            self._block_exec = parallel_lib.make_sharded_block_executor(
-                fn, self.mesh)
+            self._block_exec = self.obs.wrap(
+                "dispatch",
+                parallel_lib.make_sharded_block_executor(fn, self.mesh),
+                exec="block")
         return self._block_exec
 
     def _host_round_pre(self) -> bool:
@@ -322,14 +385,15 @@ class FedAvgTrainer:
         ``pending`` so the per-round fallback consumes it without
         re-drawing (the rng streams stay identical to a per-round run)."""
         staged, pending = [], None
-        for b in range(max_b):
-            if self._host_round_pre():
-                break
-            idx = self._select()
-            if self._needs_host(idx):
-                pending = idx
-                break
-            staged.append(self._stage_round(t0 + b, idx))
+        with self.obs.span("stage", t=t0):
+            for b in range(max_b):
+                if self._host_round_pre():
+                    break
+                idx = self._select()
+                if self._needs_host(idx):
+                    pending = idx
+                    break
+                staged.append(self._stage_round(t0 + b, idx))
         return staged, pending
 
     # carry construction/teardown — overridden down the trainer hierarchy
@@ -456,13 +520,14 @@ class FedAvgTrainer:
         eval program."""
         if not self._should_eval(t):
             return float("nan")
-        if self.population is not None:
-            return self.evaluate()
-        if self._eval_zero_mem is None:
-            self._eval_zero_mem = jnp.zeros(self.n_clients, jnp.int32)
-        return self._fused_eval_acc(
-            jax.tree_util.tree_map(lambda p: p[None], self.params),
-            self._eval_zero_mem)
+        with self.obs.span("eval", t=t):
+            if self.population is not None:
+                return self.evaluate()
+            if self._eval_zero_mem is None:
+                self._eval_zero_mem = jnp.zeros(self.n_clients, jnp.int32)
+            return self._fused_eval_acc(
+                jax.tree_util.tree_map(lambda p: p[None], self.params),
+                self._eval_zero_mem)
 
     def evaluate(self, params=None, client_idx=None) -> float:
         params = self.params if params is None else params
@@ -526,7 +591,9 @@ class FedAvgTrainer:
         t0 = len(self.history.rounds)
         total = t0 + (n_rounds or self.cfg.n_rounds)
         if self.cfg.async_depth >= 1:
-            return self._run_async(t0, total)
+            h = self._run_async(t0, total)
+            self.obs.finalize(self._summary_extra())
+            return h
         blocks = self.cfg.block_size > 1 and (
             self.population is None or
             getattr(self.population, "block_stageable", False))
@@ -550,6 +617,7 @@ class FedAvgTrainer:
                     self.round(t)
                     t += 1
             self._maybe_checkpoint(prev, t)
+        self.obs.finalize(self._summary_extra())
         return self.history
 
     # -- asynchronous runtime (FedConfig.async_depth >= 1) -------------------
@@ -581,8 +649,10 @@ class FedAvgTrainer:
                 batch_size=cfg.batch_size, lr=cfg.lr, mu=cfg.mu,
                 max_samples=self._max_samples, quarantine=cfg.quarantine,
                 quarantine_mult=cfg.quarantine_mult, **self._block_kwargs())
-            self._async_exec = parallel_lib.make_async_dispatch_executor(
-                fn, self.mesh)
+            self._async_exec = self.obs.wrap(
+                "dispatch",
+                parallel_lib.make_async_dispatch_executor(fn, self.mesh),
+                exec="async")
         return self._async_exec
 
     def _async_fold(self):
@@ -626,19 +696,20 @@ class FedAvgTrainer:
         synchronous paths. Returns ``(cold_ids, staged_inputs)``; the
         staged inputs are kept device-resident so an expired lease can
         re-dispatch them against the then-current state."""
-        self._async_host_pre()
-        idx = self._select()
-        cold = np.asarray(self._async_cold(idx))
-        if self.population is None:
-            idx_p, keys, alive, _ = self._stage_round(t, idx)
-            return cold, (jnp.asarray(idx_p), jnp.asarray(keys),
-                          jnp.asarray(alive))
-        x, y, n = self._client_batch(idx)
-        self.key, sk = jax.random.split(self.key)
-        keys = jax.random.split(sk, len(idx))
-        self._stage_comm(len(idx))
-        return cold, (np.asarray(idx), x, y, n, keys,
-                      self._async_stream_arg(idx))
+        with self.obs.span("stage", t=t):
+            self._async_host_pre()
+            idx = self._select()
+            cold = np.asarray(self._async_cold(idx))
+            if self.population is None:
+                idx_p, keys, alive, _ = self._stage_round(t, idx)
+                return cold, (jnp.asarray(idx_p), jnp.asarray(keys),
+                              jnp.asarray(alive))
+            x, y, n = self._client_batch(idx)
+            self.key, sk = jax.random.split(self.key)
+            keys = jax.random.split(sk, len(idx))
+            self._stage_comm(len(idx))
+            return cold, (np.asarray(idx), x, y, n, keys,
+                          self._async_stream_arg(idx))
 
     def _lease_ready(self, leaves) -> bool:
         """True when every device buffer of a lease's result is computed
@@ -683,11 +754,11 @@ class FedAvgTrainer:
         pinned = pop is None
         depth = max(1, int(cfg.async_depth))
         ver = self._group_version()
+        # registry-backed view (repro.obs.metrics): the async.* schema
+        # pre-seeds every counter, and the histogram dict is live — the
+        # in-place bucket bumps below land in the registry
         st = self.history.async_stats
-        for k in ("dispatches", "folds", "max_in_flight",
-                  "lease_expiries", "requeues"):
-            st.setdefault(k, 0)
-        shist = st.setdefault("staleness_hist", {})
+        shist = st["staleness_hist"]
         self._async_host_pre()
         carry = self._carry_in() if pinned else None
         exec_ = self._async_executor() if pinned else self._round_executor()
@@ -746,37 +817,47 @@ class FedAvgTrainer:
 
         def fold_one(lease):
             nonlocal carry, t_fold
-            s = (ver - lease.version).astype(np.int64)
-            w = rounds_lib.staleness_weight(
-                s, alpha=cfg.async_alpha, beta=cfg.async_beta)
-            key = str(int(s.max()) if s.size else 0)
-            shist[key] = shist.get(key, 0) + 1
             t = t_fold
-            if pinned:
-                idx_d, _, alive_d = lease.staged
-                carry = fold(carry, lease.result, idx_d, alive_d,
-                             jnp.asarray(w))
-                self._carry_refs(carry)
-                mean_loss, disc, n_quar, mem = (np.asarray(v)
-                                                for v in lease.metrics)
-                occupied = np.unique(mem[np.asarray(alive_d) > 0])
-                acc = (self._fused_eval_acc(carry["group_params"],
-                                            carry["membership"][:-1])
-                       if self._should_eval(t) else float("nan"))
-            else:
-                out = lease.result
-                groups, glob = fold(self._stacked_group_params(),
-                                    out.group_params, out.global_params,
-                                    jnp.asarray(w))
-                self._async_adopt(out, lease.staged[0], groups, glob)
-                occupied = np.unique(np.asarray(out.membership))
-                mean_loss, disc, n_quar = (out.mean_loss, out.discrepancy,
-                                           out.n_quarantined)
-                acc = self._round_eval(t)
-            ver[occupied] += 1
-            st["folds"] += 1
-            self.history.add(RoundMetrics(t, acc, float(mean_loss),
-                                          float(disc), int(n_quar)))
+            with self.obs.span("fold", t=t):
+                s = (ver - lease.version).astype(np.int64)
+                w = rounds_lib.staleness_weight(
+                    s, alpha=cfg.async_alpha, beta=cfg.async_beta)
+                key = str(int(s.max()) if s.size else 0)
+                shist[key] = shist.get(key, 0) + 1
+                if self.obs.recording:
+                    self._last_staleness = int(s.max()) if s.size else 0
+                    self._last_weights = [float(v)
+                                          for v in np.asarray(w).ravel()]
+                if pinned:
+                    idx_d, _, alive_d = lease.staged
+                    carry = fold(carry, lease.result, idx_d, alive_d,
+                                 jnp.asarray(w))
+                    self._carry_refs(carry)
+                    mean_loss, disc, n_quar, mem = (np.asarray(v)
+                                                    for v in lease.metrics)
+                    occupied = np.unique(mem[np.asarray(alive_d) > 0])
+                    if self._should_eval(t):
+                        with self.obs.span("eval", t=t):
+                            acc = self._fused_eval_acc(
+                                carry["group_params"],
+                                carry["membership"][:-1])
+                    else:
+                        acc = float("nan")
+                else:
+                    out = lease.result
+                    groups, glob = fold(self._stacked_group_params(),
+                                        out.group_params, out.global_params,
+                                        jnp.asarray(w))
+                    self._async_adopt(out, lease.staged[0], groups, glob)
+                    occupied = np.unique(np.asarray(out.membership))
+                    mean_loss, disc, n_quar = (out.mean_loss,
+                                               out.discrepancy,
+                                               out.n_quarantined)
+                    acc = self._round_eval(t)
+                ver[occupied] += 1
+                st["folds"] += 1
+                self.history.add(RoundMetrics(t, acc, float(mean_loss),
+                                              float(disc), int(n_quar)))
             t_fold += 1
 
         def harvest():
@@ -863,28 +944,38 @@ class FedAvgTrainer:
                 raise ValueError("pass a path or set FedConfig"
                                  ".checkpoint_dir")
             path = ckpt_io.checkpoint_path(self.cfg.checkpoint_dir, t)
-        state, pop_meta = {}, None
-        if self.population is not None:
-            state, pop_meta = self.population.ckpt_state()
-        meta = {"framework": self.framework, "t": t,
-                "n_clients": int(self.n_clients),
-                "rng": self.rng.bit_generator.state,
-                "select_rng": self.select_rng.bit_generator.state,
-                "comm_params": int(self.comm_params),
-                "history": [[r.round, r.weighted_acc, r.mean_loss,
-                             r.discrepancy, r.quarantined]
-                            for r in self.history.rounds],
-                "extra": self._ckpt_meta_extra(),
-                # async runtime state: the per-group staleness clocks and
-                # degradation counters (leases themselves never reach a
-                # checkpoint — the async loop drains to quiescence first)
-                "group_version": ([int(v) for v in self.group_version]
-                                  if self.group_version is not None
-                                  else None),
-                "async_stats": self.history.async_stats,
-                "population": pop_meta}
-        ckpt_io.save_pytree(path, {"model": self._ckpt_model_tree(),
-                                   "state": state}, meta)
+        # counted before the snapshot so the checkpoint's own registry
+        # capture includes itself — resumed totals match uninterrupted ones
+        self.obs.registry.inc("rounds.checkpoints")
+        with self.obs.span("checkpoint", t=t):
+            state, pop_meta = {}, None
+            if self.population is not None:
+                # drains the writer and syncs writer_retries into the
+                # registry BEFORE the snapshot below — every degradation
+                # counter reaches the checkpoint through one surface
+                state, pop_meta = self.population.ckpt_state()
+            meta = {"framework": self.framework, "t": t,
+                    "n_clients": int(self.n_clients),
+                    "rng": self.rng.bit_generator.state,
+                    "select_rng": self.select_rng.bit_generator.state,
+                    "comm_params": int(self.comm_params),
+                    "history": [[r.round, r.weighted_acc, r.mean_loss,
+                                 r.discrepancy, r.quarantined]
+                                for r in self.history.rounds],
+                    "extra": self._ckpt_meta_extra(),
+                    # async runtime state: the per-group staleness clocks
+                    # (leases themselves never reach a checkpoint — the
+                    # async loop drains to quiescence first)
+                    "group_version": ([int(v) for v in self.group_version]
+                                      if self.group_version is not None
+                                      else None),
+                    # the unified registry snapshot: async.* degradation
+                    # counters, pop.* robustness counters, rounds.* series
+                    # — one consistent mid-run capture (format v3)
+                    "obs": self.obs.registry.snapshot(),
+                    "population": pop_meta}
+            ckpt_io.save_pytree(path, {"model": self._ckpt_model_tree(),
+                                       "state": state}, meta)
         return path
 
     def load_checkpoint(self, path_or_dir: str) -> int:
@@ -930,10 +1021,9 @@ class FedAvgTrainer:
         self.rng.bit_generator.state = meta["rng"]
         self.select_rng.bit_generator.state = meta["select_rng"]
         self.comm_params = int(meta["comm_params"])
-        self.history = History(
+        self._bind_history(History(
             [RoundMetrics(int(r[0]), float(r[1]), float(r[2]), float(r[3]),
-                          int(r[4])) for r in meta["history"]])
-        self.history.async_stats = dict(meta.get("async_stats") or {})
+                          int(r[4])) for r in meta["history"]]))
         gv = meta.get("group_version")
         if gv is not None:
             self._group_version()[:] = np.asarray(gv, np.int64)
@@ -944,13 +1034,26 @@ class FedAvgTrainer:
             self.population.ckpt_restore(
                 {k: np.asarray(v) for k, v in tree["state"].items()},
                 meta["population"])
+        # cumulative counters come back through the unified registry
+        # snapshot (format v3); pre-v3 archives carried only async_stats
+        obs_snap = meta.get("obs")
+        if obs_snap is None and meta.get("async_stats"):
+            obs_snap = {f"async.{k}": v
+                        for k, v in meta["async_stats"].items()}
+        self.obs.registry.restore(obs_snap or {})
+        # drop streamed round records at/after the resume point — the
+        # resumed run re-emits them, so the JSONL stream stays free of
+        # duplicates and byte-identical to an uninterrupted run's
+        self.obs.resume_at(int(meta["t"]))
         self._resumed = True
         return int(meta["t"])
 
     def close(self):
-        """Stop the population prefetch thread (no-op in pinned mode)."""
+        """Stop the population prefetch thread (no-op in pinned mode) and
+        finalize the telemetry artifacts (trace.json / run_summary.json)."""
         if self.population is not None:
             self.population.close()
+        self.obs.finalize(self._summary_extra())
 
 
 class FedProxTrainer(FedAvgTrainer):
@@ -972,12 +1075,36 @@ class GroupedTrainer(FedAvgTrainer):
                  population=None):
         super().__init__(model, data, cfg, mesh=mesh, population=population)
         self.m = cfg.n_groups
+        self._mig_last = None       # cohort membership flips last round
         if population is not None:
             # membership IS the persistent state table's column, so the
             # trainers' in-place writes survive across cohorts/restarts
             self.membership = population.state.membership
         else:
             self.membership = np.full(self.n_clients, -1, np.int64)
+
+    def _adopt_membership(self, idx, new):
+        """Write a cohort's new group assignments into the membership
+        column, counting migrations (previously-assigned clients switching
+        groups — FlexCFL's core drift signal) into the registry."""
+        new = np.asarray(new)
+        old = self.membership[idx]
+        mig = int(np.sum((old >= 0) & (old != new)))
+        self._mig_last = mig
+        if mig:
+            self.obs.registry.inc("rounds.migrations", mig)
+        with self.obs.span("state-write", rows=int(len(new))):
+            self.membership[idx] = new
+
+    def _round_record(self, m: RoundMetrics) -> dict:
+        rec = super()._round_record(m)
+        mem = self.membership
+        sizes = np.bincount(mem[mem >= 0].astype(np.int64), minlength=self.m)
+        rec["group_sizes"] = [int(v) for v in sizes[:self.m]]
+        if self._mig_last is not None:
+            rec["migrations"] = self._mig_last
+            self._mig_last = None
+        return rec
 
     def group_param(self, j: int):
         """The j-th group's parameter pytree (view into the stacked state)."""
@@ -1008,7 +1135,8 @@ class GroupedTrainer(FedAvgTrainer):
     def _round_eval(self, t: int) -> float:
         if not self._should_eval(t):
             return float("nan")
-        return self.evaluate_groups()
+        with self.obs.span("eval", t=t):
+            return self.evaluate_groups()
 
     # -- round-block carry: m-stacked groups + membership ------------------
     def _membership_host(self):
@@ -1031,7 +1159,7 @@ class GroupedTrainer(FedAvgTrainer):
         # membership writes; the consensus params stay untouched, exactly
         # as the synchronous round() leaves them
         self.group_params = folded_groups
-        self.membership[idx] = np.asarray(out.membership)
+        self._adopt_membership(idx, out.membership)
 
     # -- checkpointing: m-stacked groups + membership ----------------------
     def _ckpt_model_tree(self) -> dict:

@@ -149,7 +149,7 @@ class FeSEMTrainer(GroupedTrainer):
                 idx, np.asarray(out.assign_state["local_flat"]))
         else:
             self.local_flat = out.assign_state["local_flat"]
-        self.membership[idx] = np.asarray(out.membership)
+        self._adopt_membership(idx, out.membership)
         acc = self._round_eval(t)
         m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy),
                          int(out.n_quarantined))

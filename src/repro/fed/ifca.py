@@ -77,8 +77,9 @@ class IFCATrainer(GroupedTrainer):
         out = self._round_executor()(self.group_params, None, x, y, n, keys)
         self.group_params = out.group_params
         # persists into the population state table when streaming (the
-        # trainer's membership array IS the table's column)
-        self.membership[idx] = np.asarray(out.membership)
+        # trainer's membership array IS the table's column); migrations
+        # are counted into the telemetry registry on the way through
+        self._adopt_membership(idx, out.membership)
         acc = self._round_eval(t)
         m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy),
                          int(out.n_quarantined))

@@ -61,19 +61,37 @@ import numpy as np
 from repro.fed import parallel as parallel_lib
 from repro.fed.store import (SELECT_STREAM, ClientStateTable, ClientStore,
                              ShardedClientStore, shard_cohort_slices)
+from repro.obs import metrics as obs_metrics
+from repro.obs import telemetry as obs_lib
+from repro.obs import trace as obs_trace
 
 # fault-injection sentinel: makes the writer worker return without
 # completing its pending item — the observable state of a thread killed
 # mid-write (dead, pending count still up), with no traceback noise
 _CRASH = object()
 
-# canonical zero state of Population.stats — one schema for fresh runs,
-# reset_stats() and checkpoint restore (async counters are fed by the
-# engine's scheduler loop; writer_retries mirrors _AsyncStateWriter.retries)
+# canonical zero state of Population.stats — THE single source of truth
+# for the population degradation schema: the registry's ``pop.*`` metric
+# declarations and the back-compat ``Population.stats`` view are both
+# derived from it (async counters are fed by the engine's scheduler loop;
+# writer_retries mirrors _AsyncStateWriter.retries)
 _STATS_ZERO = {"deadline_rounds": 0, "deadline_dropped_clients": 0,
                "killed_clients": 0, "corrupted_clients": 0,
                "writer_crashes": 0, "writer_retries": 0,
                "lease_expiries": 0, "requeues": 0}
+
+
+def pop_metric_specs():
+    """The registry schema derived from ``_STATS_ZERO`` — tests assert the
+    two never drift apart."""
+    return [obs_metrics.MetricSpec(f"pop.{k}", obs_metrics.COUNTER,
+                                   "population degradation counter")
+            for k in _STATS_ZERO]
+
+
+# spans from writers constructed outside a Population (unit tests) go
+# nowhere: a permanently-disabled tracer whose span() is the no-op path
+_NULL_TRACER = obs_trace.Tracer(enabled=False)
 
 
 class _AsyncStateWriter:
@@ -99,8 +117,10 @@ class _AsyncStateWriter:
     ``Population.stats`` as ``writer_retries``)."""
 
     def __init__(self, timeout: float = 60.0, max_retries: int = 3,
-                 backoff: float = 0.02, backoff_cap: float = 1.0):
+                 backoff: float = 0.02, backoff_cap: float = 1.0,
+                 tracer=None):
         self.timeout = timeout
+        self._tracer = tracer if tracer is not None else _NULL_TRACER
         self.max_retries = int(max_retries)
         self.backoff = float(backoff)
         self.backoff_cap = float(backoff_cap)
@@ -138,7 +158,8 @@ class _AsyncStateWriter:
                 self._label = label
             if fn is _CRASH:
                 return                  # injected fault: die, pending stays
-            self._attempt(fn, args, label)
+            with self._tracer.span("state-write", label=label):
+                self._attempt(fn, args, label)
             with self._cond:
                 self._pending -= 1
                 self._label = None
@@ -501,7 +522,12 @@ class Population:
         self._thread = None
         self._stop = threading.Event()
         self._producer_error = None
-        self._writer = _AsyncStateWriter()
+        # per-population telemetry bundle: the registry is OWN (counters
+        # must not bleed across populations) but the tracer is shared with
+        # the process default when a harness installed one (repro.obs)
+        self.obs = obs_lib.from_config(None)
+        self.obs.registry.declare(pop_metric_specs())
+        self._writer = _AsyncStateWriter(tracer=self.obs.tracer)
         self._warned_eval_scale = False
         self._cohort = None            # live (most recently consumed) cohort
         self._eval_ids = None
@@ -510,16 +536,18 @@ class Population:
         self._track_sched = False      # capture per-cohort scheduler snaps
         self._consumed_sched = None    # snapshot of the last consumed round
         # robustness counters: fault-injection effects + deadline
-        # degradation + async-runtime lease churn. Reset per run()
-        # (reset_stats) and carried through ckpt_state/ckpt_restore so a
-        # resumed run reports totals consistent with an uninterrupted one.
-        self.stats = dict(_STATS_ZERO)
+        # degradation + async-runtime lease churn. Registry-backed view
+        # keyed by the legacy short names (``pop.*`` metrics underneath);
+        # reset per run() (reset_stats) and carried through checkpoints so
+        # a resumed run reports totals consistent with an uninterrupted one.
+        self.stats = self.obs.registry.view(
+            {k: f"pop.{k}" for k in _STATS_ZERO})
 
     def reset_stats(self):
         """Zero the robustness counters (called by the engine at the start
         of a *fresh* run — a checkpoint-resumed run keeps the restored
         totals so interrupted and uninterrupted runs report alike)."""
-        self.stats = dict(_STATS_ZERO)
+        self.obs.registry.reset([f"pop.{k}" for k in _STATS_ZERO])
         self._writer.retries = 0
 
     # -- trainer binding ---------------------------------------------------
@@ -535,6 +563,8 @@ class Population:
         # snapshot per cohort at select time
         self._track_sched = bool(getattr(fed_cfg, "checkpoint_every", 0)
                                  or getattr(fed_cfg, "checkpoint_dir", None))
+        if getattr(fed_cfg, "telemetry_dir", None):
+            self.obs.configure(fed_cfg.telemetry_dir)
         if self.cfg.eval_clients is not None and \
                 self.cfg.eval_clients < self.store.n_clients:
             eval_rng = np.random.default_rng(
@@ -548,8 +578,11 @@ class Population:
     # -- device placement --------------------------------------------------
     def _put(self, arrays):
         """Start the H2D transfer (sharded over the trainer mesh when one
-        is present; plain async device_put otherwise)."""
-        return parallel_lib.shard_client_axis(self.mesh, arrays)
+        is present; plain async device_put otherwise). The span measures
+        the *enqueue* — device_put is asynchronous — so long h2d spans
+        mean host-side staging pressure, not transfer bandwidth."""
+        with self.obs.span("h2d", rows=int(len(arrays[-1]))):
+            return parallel_lib.shard_client_axis(self.mesh, arrays)
 
     def _n_shards(self) -> int:
         return parallel_lib.mesh_data_shards(self.mesh)
@@ -565,7 +598,8 @@ class Population:
         if self.mesh is not None and isinstance(store, ShardedClientStore):
             parts = store._gather_shards(split, idx, self._n_shards())
             if parts is not None:
-                return parallel_lib.put_sharded_cohort(self.mesh, parts)
+                with self.obs.span("h2d", rows=int(len(idx))):
+                    return parallel_lib.put_sharded_cohort(self.mesh, parts)
         return self._put(store._gather(split, np.asarray(idx, np.int64)))
 
     def device_batch(self, idx):
@@ -701,22 +735,25 @@ class Population:
             for t in itertools.count(self.rounds_streamed):
                 if self._stop.is_set():
                     return
-                idx, n_new, spec, snap = self._pre_round_faults(t)
-                if self.cfg.deadline is not None:
-                    arrays = self._gather_staged(t, idx, spec, n_new, snap)
-                    if arrays is None:      # consumer claimed the prefix
-                        continue
-                    x, y, n = arrays
-                elif spec is not None and (spec.straggle > 0 or
-                                           spec.corrupt > 0):
-                    if spec.straggle > 0:
-                        time.sleep(spec.straggle)
-                    host = self.store._gather("train", idx)
-                    x, y, n = self._put(
-                        self._corrupt(t, spec, host, 0, len(idx)))
-                else:
-                    x, y, n = self._gather_put("train", idx)
-                cohort = Cohort(t, idx, x, y, n, n_new, sched_state=snap)
+                with self.obs.span("stage", t=t):
+                    idx, n_new, spec, snap = self._pre_round_faults(t)
+                    if self.cfg.deadline is not None:
+                        arrays = self._gather_staged(t, idx, spec, n_new,
+                                                     snap)
+                        if arrays is None:  # consumer claimed the prefix
+                            continue
+                        x, y, n = arrays
+                    elif spec is not None and (spec.straggle > 0 or
+                                               spec.corrupt > 0):
+                        if spec.straggle > 0:
+                            time.sleep(spec.straggle)
+                        host = self.store._gather("train", idx)
+                        x, y, n = self._put(
+                            self._corrupt(t, spec, host, 0, len(idx)))
+                    else:
+                        x, y, n = self._gather_put("train", idx)
+                    cohort = Cohort(t, idx, x, y, n, n_new,
+                                    sched_state=snap)
                 while not self._stop.is_set():
                     try:
                         self._queue.put(cohort, timeout=0.2)
@@ -782,37 +819,41 @@ class Population:
         """The prefetch=0 path: selection + gather inline, with the same
         fault injection and (chunked) deadline degradation as the
         producer."""
-        idx, n_new, spec, snap = self._pre_round_faults(t)
-        if self.cfg.deadline is None:
-            if spec is not None and (spec.straggle > 0 or spec.corrupt > 0):
-                if spec.straggle > 0:
-                    time.sleep(spec.straggle)
-                host = self.store._gather("train", idx)
-                arrays = self._put(self._corrupt(t, spec, host, 0, len(idx)))
-            else:
-                arrays = self._gather_put("train", idx)
-            return Cohort(t, idx, *arrays, n_new, sched_state=snap)
-        step = self._stage_chunks(len(idx))
-        n_chunks = -(-len(idx) // step)
-        delay = spec.straggle / n_chunks \
-            if spec is not None and spec.straggle > 0 else 0.0
-        end = time.monotonic() + self.cfg.deadline
-        parts, staged = [], 0
-        for lo in range(0, len(idx), step):
-            if staged > 0 and time.monotonic() >= end:
-                self.stats["deadline_rounds"] += 1
-                self.stats["deadline_dropped_clients"] += len(idx) - staged
-                idx = idx[:staged]
-                break
-            if delay:
-                time.sleep(delay)
-            part = self.store._gather("train", idx[lo:lo + step])
-            parts.append(self._corrupt(t, spec, part, lo, len(idx)))
-            staged += len(part[2])
-        arrays = self._put(tuple(np.concatenate([p[i] for p in parts])
-                                 for i in range(3)))
-        return Cohort(t, idx, *arrays, min(n_new, len(idx)),
-                      sched_state=snap)
+        with self.obs.span("stage", t=t):
+            idx, n_new, spec, snap = self._pre_round_faults(t)
+            if self.cfg.deadline is None:
+                if spec is not None and (spec.straggle > 0 or
+                                         spec.corrupt > 0):
+                    if spec.straggle > 0:
+                        time.sleep(spec.straggle)
+                    host = self.store._gather("train", idx)
+                    arrays = self._put(
+                        self._corrupt(t, spec, host, 0, len(idx)))
+                else:
+                    arrays = self._gather_put("train", idx)
+                return Cohort(t, idx, *arrays, n_new, sched_state=snap)
+            step = self._stage_chunks(len(idx))
+            n_chunks = -(-len(idx) // step)
+            delay = spec.straggle / n_chunks \
+                if spec is not None and spec.straggle > 0 else 0.0
+            end = time.monotonic() + self.cfg.deadline
+            parts, staged = [], 0
+            for lo in range(0, len(idx), step):
+                if staged > 0 and time.monotonic() >= end:
+                    self.stats["deadline_rounds"] += 1
+                    self.stats["deadline_dropped_clients"] += \
+                        len(idx) - staged
+                    idx = idx[:staged]
+                    break
+                if delay:
+                    time.sleep(delay)
+                part = self.store._gather("train", idx[lo:lo + step])
+                parts.append(self._corrupt(t, spec, part, lo, len(idx)))
+                staged += len(part[2])
+            arrays = self._put(tuple(np.concatenate([p[i] for p in parts])
+                                     for i in range(3)))
+            return Cohort(t, idx, *arrays, min(n_new, len(idx)),
+                          sched_state=snap)
 
     def next_cohort(self) -> Cohort:
         """The next scheduled round batch, already on (or in flight to) the
@@ -922,8 +963,10 @@ class Population:
         self.state.ckpt_restore(arrays)
         self.rounds_streamed = int(meta["rounds_streamed"])
         # restored totals replace the fresh zeros (missing = old snapshot
-        # schema inside a current-format archive: keep zeros for new keys)
-        self.stats = dict(_STATS_ZERO)
+        # schema inside a current-format archive: keep zeros for new keys);
+        # the engine's registry restore then overwrites with the same
+        # values from the unified "obs" snapshot when one is present
+        self.obs.registry.reset([f"pop.{k}" for k in _STATS_ZERO])
         self.stats.update(meta.get("stats", {}))
         self._consumed_sched = self.scheduler.snapshot() \
             if self._track_sched else None

@@ -70,7 +70,8 @@ def run_fed(args) -> int:
                     measure=args.measure, seed=args.seed,
                     async_depth=args.async_depth,
                     async_alpha=args.async_alpha,
-                    async_beta=args.async_beta)
+                    async_beta=args.async_beta,
+                    telemetry_dir=args.telemetry_dir)
     tr = frameworks[args.framework](model, data, cfg)
     print(f"# {args.framework} on {data.name}: {data.n_clients} clients, "
           f"m={cfg.n_groups}, K={cfg.clients_per_round}, E={cfg.local_epochs}"
@@ -103,6 +104,10 @@ def run_fed(args) -> int:
         with open(os.path.join(args.out, "history.json"), "w") as f:
             json.dump([r.__dict__ for r in tr.history.rounds], f, indent=1)
         print(f"saved to {args.out}")
+    tr.close()          # flush telemetry (trace.json + run_summary.json)
+    if args.telemetry_dir:
+        print(f"telemetry in {args.telemetry_dir} — render with "
+              f"python -m repro.launch.inspect {args.telemetry_dir}")
     return 0
 
 
@@ -166,6 +171,9 @@ def main(argv=None) -> int:
                          "with FedAsync staleness weights (0 = synchronous)")
     ap.add_argument("--async-alpha", type=float, default=1.0,
                     dest="async_alpha")
+    ap.add_argument("--telemetry-dir", default=None, dest="telemetry_dir",
+                    help="stream spans/metrics here; render with "
+                         "python -m repro.launch.inspect DIR")
     ap.add_argument("--async-beta", type=float, default=0.0,
                     dest="async_beta")
     # lm args

@@ -1,0 +1,24 @@
+"""Unified telemetry layer (docs/observability.md).
+
+``obs.trace``     — span tracer + Chrome-trace export + profiler hooks
+``obs.metrics``   — typed counters/gauges/histograms behind one schema
+``obs.telemetry`` — the per-run bundle wiring both to a telemetry dir
+"""
+from repro.obs.metrics import (ASYNC_SCHEMA, COUNTER, GAUGE, HIST,
+                               ROUND_SCHEMA, MetricsRegistry, MetricSpec,
+                               MetricsView)
+from repro.obs.telemetry import (JsonlSink, Telemetry, from_config,
+                                 get_default, set_default)
+from repro.obs.trace import (NULL_SPAN, SPAN_KINDS, SpanRecord, Tracer,
+                             chrome_trace_doc, export_chrome_trace,
+                             start_profiler, stop_profiler,
+                             validate_chrome_trace)
+
+__all__ = [
+    "ASYNC_SCHEMA", "COUNTER", "GAUGE", "HIST", "ROUND_SCHEMA",
+    "MetricSpec", "MetricsRegistry", "MetricsView", "JsonlSink",
+    "Telemetry", "from_config", "get_default", "set_default",
+    "NULL_SPAN", "SPAN_KINDS", "SpanRecord", "Tracer",
+    "chrome_trace_doc", "export_chrome_trace", "start_profiler",
+    "stop_profiler", "validate_chrome_trace",
+]

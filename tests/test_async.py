@@ -376,8 +376,10 @@ class TestCheckpointFormat:
         # archives written before versioning existed carry no format key
         path = str(tmp_path / "legacy.npz")
         self._write_archive(path, {"t": 3})
-        with pytest.raises(ckpt_io.CheckpointFormatError,
-                           match="format version 1, expected 2"):
+        with pytest.raises(
+                ckpt_io.CheckpointFormatError,
+                match=f"format version 1, expected "
+                      f"{ckpt_io.CKPT_FORMAT_VERSION}"):
             ckpt_io.load_metadata(path)
 
     def test_version_checked_before_template_matching(self, tmp_path):

@@ -45,7 +45,7 @@ class TestDocLinks:
 
     def test_required_docs_exist(self):
         for doc in ("README.md", "docs/architecture.md", "docs/scaling.md",
-                    "docs/benchmarks.md"):
+                    "docs/benchmarks.md", "docs/observability.md"):
             assert os.path.exists(os.path.join(_REPO, doc)), doc
 
     def test_reference_extraction(self):

@@ -1,0 +1,450 @@
+"""Unified telemetry layer (PR 8): spans, metrics registry, JSONL stream,
+inspector.
+
+Covers the observability acceptance contract: spans nest and close under
+the async in-flight window (depth > 1) and across lease expiry/requeue;
+the Chrome-trace export validates against the trace-event schema; the
+metrics registry round-trips through checkpoint metadata; the telemetry
+JSONL stream is bit-stable across kill-and-resume; ``Population.stats``'s
+``_STATS_ZERO`` and the ``pop.*`` registry schema never drift apart; and
+``launch/inspect.py`` renders and schema-lints a real telemetry dir.
+"""
+import json
+import os
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core.fedgroup import FedGroupTrainer  # noqa: E402
+from repro.data.generators import mnist_like  # noqa: E402
+from repro.fed.engine import FedAvgTrainer, FedConfig  # noqa: E402
+from repro.fed.fesem import FeSEMTrainer  # noqa: E402
+from repro.fed.population import (Population, PopulationConfig,  # noqa: E402
+                                  _STATS_ZERO, pop_metric_specs)
+from repro.fed.store import ArrayClientStore  # noqa: E402
+from repro.launch import inspect as inspect_cli  # noqa: E402
+from repro.obs import (ASYNC_SCHEMA, COUNTER, GAUGE, HIST,  # noqa: E402
+                       NULL_SPAN, JsonlSink, MetricSpec, MetricsRegistry,
+                       Telemetry, Tracer, chrome_trace_doc,
+                       validate_chrome_trace)
+from repro.obs import telemetry as obs_telemetry  # noqa: E402
+
+pytestmark = pytest.mark.obs
+
+N_CLIENTS = 40
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    return mnist_like(seed=0, n_clients=N_CLIENTS, classes_per_client=2,
+                      total_train=2000, dim=16)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    from repro.models.paper_models import mclr
+    return mclr(16, 10)
+
+
+def _cfg(**kw):
+    base = dict(n_rounds=4, clients_per_round=8, local_epochs=2,
+                batch_size=5, lr=0.05, n_groups=3, pretrain_scale=4, seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _fresh(cls, model, data, streamed, **cfg_kw):
+    cfg = _cfg(**cfg_kw)
+    if streamed:
+        pop = Population(ArrayClientStore(data),
+                         PopulationConfig(initial_active=30,
+                                          arrival_rate=2.0, prefetch=2))
+        return cls(model, None, cfg, population=pop)
+    return cls(model, data, cfg)
+
+
+# ---------------------------------------------------------------------------
+# span tracer
+# ---------------------------------------------------------------------------
+class TestTracer:
+    def test_disabled_is_structural_noop(self):
+        tr = Tracer(enabled=False)
+        assert tr.span("stage", t=0) is NULL_SPAN
+        with tr.span("dispatch"):
+            pass
+        assert tr.records() == [] and tr.open_depth() == 0
+
+    def test_nesting_depth_and_close(self):
+        tr = Tracer(enabled=True)
+        with tr.span("stage", t=0):
+            with tr.span("h2d"):
+                pass
+        assert tr.open_depth() == 0
+        by_kind = {r.kind: r for r in tr.records()}
+        assert by_kind["stage"].depth == 0 and by_kind["h2d"].depth == 1
+        # inner span closed first: ring order is completion order
+        assert [r.kind for r in tr.records()] == ["h2d", "stage"]
+        assert all(r.dur_ns >= 0 for r in tr.records())
+
+    def test_ring_buffer_is_bounded(self):
+        tr = Tracer(enabled=True, capacity=4)
+        for i in range(10):
+            with tr.span("eval", t=i):
+                pass
+        recs = tr.records()
+        assert len(recs) == 4
+        assert [r.attrs["t"] for r in recs] == [6, 7, 8, 9]
+
+    def test_per_thread_stacks(self):
+        tr = Tracer(enabled=True)
+        seen = {}
+
+        def worker():
+            with tr.span("state-write"):
+                seen["depth"] = tr.open_depth()
+
+        with tr.span("stage"):
+            t = threading.Thread(target=worker)
+            t.start()
+            t.join()
+        # the worker's span does not nest under the main thread's
+        assert seen["depth"] == 1
+        assert {r.kind: r.depth for r in tr.records()} == \
+            {"state-write": 0, "stage": 0}
+
+    def test_wrap_checks_enabled_per_call(self):
+        tr = Tracer(enabled=False)
+        f = tr.wrap("dispatch", lambda x: x + 1, exec="round")
+        assert f(1) == 2 and tr.records() == []
+        tr.enabled = True          # enabled AFTER the wrap was built
+        assert f(2) == 3
+        assert [r.kind for r in tr.records()] == ["dispatch"]
+        assert tr.records()[0].attrs["exec"] == "round"
+
+
+class TestChromeTrace:
+    def test_export_validates(self):
+        tr = Tracer(enabled=True)
+        with tr.span("stage", t=0):
+            with tr.span("fold", t=0):
+                pass
+        doc = chrome_trace_doc(tr.chrome_events())
+        assert validate_chrome_trace(doc) == []
+        names = {ev["name"] for ev in doc["traceEvents"]}
+        assert names == {"stage", "fold"}
+        for ev in doc["traceEvents"]:
+            assert ev["ph"] == "X" and ev["ts"] >= 0 and ev["dur"] >= 0
+
+    def test_broken_event_fails_validation(self):
+        tr = Tracer(enabled=True)
+        with tr.span("eval"):
+            pass
+        doc = chrome_trace_doc(tr.chrome_events())
+        del doc["traceEvents"][0]["ts"]
+        assert validate_chrome_trace(doc)
+        assert validate_chrome_trace({"not": "a trace"})
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + views
+# ---------------------------------------------------------------------------
+class TestRegistry:
+    def test_declare_inc_observe_snapshot_restore(self):
+        reg = MetricsRegistry()
+        reg.inc("async.dispatches", 3)
+        reg.set("async.max_in_flight", 2)
+        reg.observe("async.staleness_hist", 1)
+        reg.observe("async.staleness_hist", 1)
+        snap = reg.snapshot()
+        assert snap["async.dispatches"] == 3
+        assert snap["async.staleness_hist"] == {"1": 2}  # str buckets
+
+        reg2 = MetricsRegistry()
+        reg2.restore(snap)
+        assert reg2.snapshot() == snap
+        # restore into a registry with prior state overwrites, not merges
+        reg2.inc("async.dispatches")
+        reg2.restore(snap)
+        assert reg2.get("async.dispatches") == 3
+
+    def test_kind_conflict_is_an_error(self):
+        reg = MetricsRegistry()
+        with pytest.raises(ValueError, match="redeclared"):
+            reg.declare([MetricSpec("async.dispatches", GAUGE)])
+        # idempotent re-declaration is fine
+        reg.declare([MetricSpec("async.dispatches", COUNTER)])
+
+    def test_unknown_metric_raises(self):
+        reg = MetricsRegistry()
+        with pytest.raises(KeyError):
+            reg.inc("nope.nothing")
+
+    def test_view_is_live_and_fixed_keyset(self):
+        reg = MetricsRegistry()
+        view = reg.view({"dispatches": "async.dispatches",
+                         "staleness_hist": "async.staleness_hist"})
+        reg.inc("async.dispatches", 2)
+        assert view["dispatches"] == 2
+        view["dispatches"] = 7                      # write-through
+        assert reg.get("async.dispatches") == 7
+        # the hist view hands back the LIVE dict: in-place mutation lands
+        h = view["staleness_hist"]
+        h["0"] = h.get("0", 0) + 1                  # the engine's pattern
+        assert reg.get("async.staleness_hist") == {"0": 1}
+        assert view == {"dispatches": 7, "staleness_hist": {"0": 1}}
+        with pytest.raises(TypeError):
+            del view["dispatches"]
+        with pytest.raises(KeyError):
+            view["unmapped"]
+
+    def test_pop_schema_matches_stats_zero(self):
+        # _STATS_ZERO is THE single source of truth for population
+        # degradation counters — the registry schema is derived from it
+        assert {s.name for s in pop_metric_specs()} == \
+            {f"pop.{k}" for k in _STATS_ZERO}
+        assert all(s.kind == COUNTER for s in pop_metric_specs())
+        pop = Population(ArrayClientStore(
+            mnist_like(seed=0, n_clients=8, classes_per_client=2,
+                       total_train=400, dim=8)), PopulationConfig())
+        assert set(pop.stats) == set(_STATS_ZERO)
+        assert set(pop.obs.registry.names("pop.")) == \
+            {f"pop.{k}" for k in _STATS_ZERO}
+        pop.close()
+
+    def test_async_schema_covers_legacy_async_stats_keys(self):
+        legacy = {"dispatches", "folds", "max_in_flight", "lease_expiries",
+                  "requeues", "staleness_hist"}
+        assert {s.name.split(".", 1)[1] for s in ASYNC_SCHEMA} == legacy
+        hists = [s.name for s in ASYNC_SCHEMA if s.kind == HIST]
+        assert hists == ["async.staleness_hist"]
+
+
+class TestFromConfig:
+    def test_fresh_registry_shared_tracer(self):
+        default = Telemetry(enabled=True)
+        obs_telemetry.set_default(default)
+        try:
+            a = obs_telemetry.from_config(None)
+            b = obs_telemetry.from_config(None)
+            assert a.tracer is default.tracer is b.tracer
+            assert a.registry is not b.registry
+            assert a.registry is not default.registry
+            a.registry.inc("async.dispatches")
+            assert b.registry.get("async.dispatches") == 0
+        finally:
+            obs_telemetry.set_default(None)
+        c = obs_telemetry.from_config(None)
+        assert not c.enabled and c.tracer is not default.tracer
+
+
+# ---------------------------------------------------------------------------
+# JSONL sink
+# ---------------------------------------------------------------------------
+class TestJsonlSink:
+    def test_deterministic_encoding_and_rotation(self, tmp_path):
+        sink = JsonlSink(str(tmp_path), max_bytes=64)
+        for t in range(6):
+            sink.emit({"kind": "round", "t": t, "acc": 0.5})
+        sink.close()
+        assert len(sink.segment_paths()) > 1       # rotated at 64 bytes
+        recs = sink.records()
+        assert [r["t"] for r in recs] == list(range(6))
+        line = JsonlSink.encode({"b": 1, "a": 2})
+        assert line == '{"a":2,"b":1}'             # sorted, no spaces
+
+    def test_truncate_from_compacts(self, tmp_path):
+        sink = JsonlSink(str(tmp_path), max_bytes=64)
+        for t in range(6):
+            sink.emit({"kind": "round", "t": t, "acc": 0.5})
+        sink.truncate_from(3)
+        assert [r["t"] for r in sink.records()] == [0, 1, 2]
+        assert len(sink.segment_paths()) == 1      # compacted to main file
+        sink.emit({"kind": "round", "t": 3, "acc": 0.6})
+        assert [r["t"] for r in sink.records()] == [0, 1, 2, 3]
+        sink.close()
+
+
+# ---------------------------------------------------------------------------
+# spans under the async runtime
+# ---------------------------------------------------------------------------
+class TestAsyncSpans:
+    def test_depth2_spans_balanced_and_kinds_present(self, small_model,
+                                                     small_data, tmp_path):
+        tr = _fresh(FedAvgTrainer, small_model, small_data, True,
+                    async_depth=2,
+                    telemetry_dir=str(tmp_path / "tel"))
+        tr.run(6)
+        tr.close()
+        tracer = tr.obs.tracer
+        assert tracer.open_depth() == 0            # every span closed
+        kinds = {r.kind for r in tracer.records()}
+        assert {"stage", "h2d", "dispatch", "fold", "eval"} <= kinds
+        # the population producer nests h2d puts inside its stage spans
+        assert any(r.depth > 0 for r in tracer.records())
+        assert validate_chrome_trace(chrome_trace_doc(tracer.chrome_events())) == []
+
+    def test_spans_survive_lease_expiry_requeue(self, small_model,
+                                                small_data):
+        tr = _fresh(FedAvgTrainer, small_model, small_data, False,
+                    async_depth=2, async_backoff=0.01,
+                    async_backoff_cap=0.02)
+        tr.obs.tracer.enabled = True
+        real_wait = tr._wait_ready
+        kill = {"n": 1}
+
+        def scripted(lease):
+            if kill["n"] > 0 and lease.attempts == 0:
+                kill["n"] -= 1                     # one scripted expiry
+                return False
+            return real_wait(lease)
+
+        tr._wait_ready = scripted
+        h = tr.run(4)
+        tr.close()
+        st = h.async_stats
+        assert st["lease_expiries"] == 1 and st["requeues"] == 1
+        assert tr.obs.registry.get("async.requeues") == 1
+        tracer = tr.obs.tracer
+        assert tracer.open_depth() == 0            # expiry leaked no span
+        # the requeued cohort re-dispatched: 5 dispatch spans, 4 folds
+        by_kind = {}
+        for r in tracer.records():
+            by_kind[r.kind] = by_kind.get(r.kind, 0) + 1
+        assert by_kind["dispatch"] == 5 and by_kind["fold"] == 4
+
+
+# ---------------------------------------------------------------------------
+# registry through checkpoint metadata + JSONL bit-stability
+# ---------------------------------------------------------------------------
+class TestCheckpointRoundTrip:
+    def test_registry_snapshot_rides_checkpoint_meta(self, small_model,
+                                                     small_data, tmp_path):
+        from repro.checkpoint import io as ckpt_io
+        tr = _fresh(FedAvgTrainer, small_model, small_data, False,
+                    async_depth=1, checkpoint_every=2,
+                    checkpoint_dir=str(tmp_path))
+        tr.run(4)
+        tr.close()
+        path = ckpt_io.latest_checkpoint(str(tmp_path))
+        meta = ckpt_io.load_metadata(path)
+        assert "obs" in meta and "async_stats" not in meta
+
+        resumed = _fresh(FedAvgTrainer, small_model, small_data, False,
+                         async_depth=1, checkpoint_every=2,
+                         checkpoint_dir=str(tmp_path))
+        resumed.load_checkpoint(str(tmp_path))
+        snap = resumed.obs.registry.snapshot()
+        # the restored registry holds exactly what the archive recorded
+        # (hist buckets are string-keyed end to end, so JSON round-trips)
+        for k, v in meta["obs"].items():
+            assert snap[k] == v, k
+        # the snapshot was taken AFTER counting its own checkpoint write
+        assert snap["rounds.checkpoints"] >= 1
+        resumed.close()
+
+    def test_jsonl_bit_stable_across_kill_and_resume(self, small_model,
+                                                     small_data, tmp_path):
+        kw = dict(async_depth=2, checkpoint_every=3)
+        ref = _fresh(FeSEMTrainer, small_model, small_data, True,
+                     checkpoint_dir=str(tmp_path / "ref_ck"),
+                     telemetry_dir=str(tmp_path / "ref_tel"), **kw)
+        h_ref = ref.run(8)
+        ref.close()
+
+        kill_ck = str(tmp_path / "kill_ck")
+        kill_tel = str(tmp_path / "kill_tel")
+        killed = _fresh(FeSEMTrainer, small_model, small_data, True,
+                        checkpoint_dir=kill_ck, telemetry_dir=kill_tel,
+                        **kw)
+        killed.run(5)                    # "killed" after 5 folded rounds
+        killed.close()
+
+        resumed = _fresh(FeSEMTrainer, small_model, small_data, True,
+                         checkpoint_dir=kill_ck, telemetry_dir=kill_tel,
+                         **kw)
+        t = resumed.load_checkpoint(kill_ck)
+        h_res = resumed.run(8 - t)
+        resumed.close()
+
+        assert h_res.rounds == h_ref.rounds
+        with open(os.path.join(str(tmp_path / "ref_tel"),
+                               "metrics.jsonl"), "rb") as f:
+            ref_bytes = f.read()
+        with open(os.path.join(kill_tel, "metrics.jsonl"), "rb") as f:
+            res_bytes = f.read()
+        assert ref_bytes == res_bytes    # byte-identical stream
+        # cumulative counters survived the resume (restored from meta,
+        # not recounted from zero)
+        assert resumed.obs.registry.get("rounds.completed") == 8
+
+
+# ---------------------------------------------------------------------------
+# acceptance: streamed FedGroup run + inspector
+# ---------------------------------------------------------------------------
+class TestAcceptance:
+    @pytest.fixture(scope="class")
+    def run_dir(self, small_model, small_data, tmp_path_factory):
+        tdir = str(tmp_path_factory.mktemp("fedgroup_tel"))
+        tr = _fresh(FedGroupTrainer, small_model, small_data, True,
+                    async_depth=1, checkpoint_every=2,
+                    checkpoint_dir=str(tmp_path_factory.mktemp("ck")),
+                    telemetry_dir=tdir)
+        tr.run(4)
+        tr.close()
+        return tdir
+
+    def test_streamed_fedgroup_emits_all_artifacts(self, run_dir):
+        files = set(os.listdir(run_dir))
+        assert {"metrics.jsonl", "trace.json", "run_summary.json"} <= files
+        with open(os.path.join(run_dir, "trace.json")) as f:
+            doc = json.load(f)
+        assert validate_chrome_trace(doc) == []
+        kinds = {ev["name"] for ev in doc["traceEvents"]}
+        assert len(kinds) >= 6           # acceptance floor: 6 span kinds
+        assert {"stage", "h2d", "dispatch", "fold", "eval",
+                "checkpoint"} <= kinds
+
+    def test_round_records_carry_group_series(self, run_dir):
+        with open(os.path.join(run_dir, "metrics.jsonl")) as f:
+            recs = [json.loads(line) for line in f if line.strip()]
+        rounds = [r for r in recs if r["kind"] == "round"]
+        assert [r["t"] for r in rounds] == list(range(len(rounds)))
+        for r in rounds:
+            assert {"acc", "loss", "disc", "quarantined", "group_sizes",
+                    "group_version", "staleness", "weights", "cold",
+                    "eta_g", "migrations"} <= set(r)
+            assert sum(r["group_sizes"]) >= 0
+
+    def test_summary_renders_and_checks_clean(self, run_dir):
+        out = inspect_cli.render(run_dir, inspect_cli.load_dir(run_dir),
+                                 spark=True)
+        assert "per-stage time breakdown" in out
+        assert "dispatch" in out and "rounds streamed" in out
+        assert inspect_cli.check_dir(run_dir) == []
+        assert inspect_cli.main([run_dir, "--check"]) == 0
+
+    def test_check_flags_corrupt_dir(self, run_dir, tmp_path):
+        import shutil
+        bad = str(tmp_path / "bad")
+        shutil.copytree(run_dir, bad)
+        with open(os.path.join(bad, "metrics.jsonl"), "a") as f:
+            # duplicate round index + an unparsable line
+            f.write('{"kind":"round","t":0,"acc":1.0,"loss":0.1,'
+                    '"disc":0.0,"quarantined":0}\n')
+            f.write("not json\n")
+        errors = inspect_cli.check_dir(bad)
+        assert any("not" in e and "increasing" in e for e in errors)
+        assert any("invalid JSON" in e for e in errors)
+        assert inspect_cli.main([bad, "--check"]) == 1
+
+    def test_sparkline_shapes(self):
+        assert inspect_cli.sparkline([]) == "(no data)"
+        assert inspect_cli.sparkline([1.0]) == inspect_cli._SPARK[0]
+        line = inspect_cli.sparkline(list(range(100)), width=10)
+        assert len(line) == 10
+        assert line[0] == inspect_cli._SPARK[0]
+        assert line[-1] == inspect_cli._SPARK[-1]
