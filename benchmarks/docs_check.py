@@ -26,8 +26,9 @@ import re
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 DOCUMENTED_MODULES = ("repro.fed.store", "repro.fed.population",
-                      "repro.fed.parallel", "repro.sharding.specs",
-                      "repro.obs.trace", "repro.obs.metrics")
+                      "repro.fed.parallel", "repro.fed.strategies",
+                      "repro.sharding.specs", "repro.obs.trace",
+                      "repro.obs.metrics")
 DOC_FILES = ("README.md", "docs/architecture.md", "docs/scaling.md",
              "docs/benchmarks.md", "docs/observability.md")
 

@@ -18,6 +18,9 @@
   async      staleness-aware async runtime: async-vs-sync throughput
              under a straggler trace + the D=1 equivalence mode's
              overhead (BENCH_async.json)
+  shift      distribution-shift migration: FedGroup static vs
+             shift-detector migration vs IFCA under a scripted label
+             swap (BENCH_shift.json)
   obs        telemetry layer: enabled-vs-disabled overhead on the fused
              round + schema self-lint of the bench's own telemetry dir
              via launch/inspect.py --check (BENCH_obs.json)
@@ -39,16 +42,17 @@ the 2-D/1-D round-time ratio; population the streamed-vs-pinned
 round-time ratio and the prefetch-overlap speedup; robustness the
 checkpoint overhead, quarantine efficacy and deadline saving; async the
 async-vs-sync throughput and the D=1 equivalence-mode overhead; obs the
-enabled-vs-disabled telemetry overhead on the fused round) —
-docs/benchmarks.md documents the BENCH_*.json schema and the gate
-semantics. Gate failures print a per-entry diff — which bench, crash vs
-watched-metric regression, best recorded -> measured — before the nonzero
-exit. ``--quick`` always includes the round_exec, round_block, mesh2d,
-population, robustness and docs suites, even under ``--only``:
+enabled-vs-disabled telemetry overhead on the fused round; shift the
+migration-vs-static post-swap accuracy ratio) — docs/benchmarks.md
+documents the BENCH_*.json schema and the gate semantics. Gate failures
+print a per-entry diff — which bench, crash vs watched-metric regression,
+best recorded -> measured — before the nonzero exit. ``--quick`` always
+includes the round_exec, round_block, mesh2d, population, robustness,
+shift and docs suites, even under ``--only``:
 
 ``python -m benchmarks.run --quick --only cost,table3``  — the CI perf gate
-(effectively
-cost,table3,round_exec,round_block,mesh2d,population,robustness,async,obs,docs)
+(effectively cost,table3,round_exec,round_block,mesh2d,population,
+robustness,async,obs,shift,docs)
 
 The harness installs a process-default telemetry (``repro.obs``), so the
 ``--json`` report carries per-bench per-stage span attribution under each
@@ -67,7 +71,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from benchmarks import (async_bench, clustering_cost, docs_check,
                         eta_g_sweep, fig5_edc_madc, mesh2d, obs_bench,
                         population_bench, robustness_bench, roofline,
-                        round_block, table1_heterogeneity,
+                        round_block, shift_bench, table1_heterogeneity,
                         table3_frameworks)
 from repro.obs import telemetry as obs_telemetry
 
@@ -81,6 +85,7 @@ BENCHES = {
     "robustness": robustness_bench.main,
     "async": async_bench.main,
     "obs": obs_bench.main,
+    "shift": shift_bench.main,
     "docs": docs_check.main,
     "fig5": fig5_edc_madc.main,
     "cost": clustering_cost.main,
@@ -104,11 +109,12 @@ def main(argv=None) -> int:
     if args.quick:
         # the CI gate must always exercise the round-executor, round-block,
         # 2-D mesh, population (streamed cohort), robustness (faults /
-        # checkpoint / deadline), async (staleness runtime) and obs
-        # (telemetry overhead) suites + the docs check
+        # checkpoint / deadline), async (staleness runtime), obs
+        # (telemetry overhead) and shift (migration efficacy) suites +
+        # the docs check
         for required in ("round_exec", "round_block", "mesh2d",
                          "population", "robustness", "async", "obs",
-                         "docs"):
+                         "shift", "docs"):
             if required not in names:
                 names.append(required)
     # process-default telemetry: trainers/populations the benches build

@@ -1,0 +1,108 @@
+"""Benchmark: distribution-shift migration vs static clustering.
+
+Three same-seed streamed runs against one scripted label-swap scenario
+(half the population swaps every class at round ``at``), persisted to
+BENCH_shift.json (>2x regression gate in benchmarks/run.py, always
+included under --quick):
+
+  * FedGroup-static — eq.-9 cold-start assignment, never revisited: the
+    paper's baseline, which keeps training swapped clients inside their
+    now-wrong groups;
+  * FedGroup-migrate — the same trainer with the shift detector enabled
+    (``FedConfig.shift_threshold``): drifted clients are re-probed,
+    their cached directions invalidated, and eq. 9 re-assigns them;
+  * IFCA — re-estimates every client every round (the adaptive upper
+    reference that needs no detector but pays the m-model broadcast).
+
+Watched metrics:
+
+  * ``migration_vs_static`` (min): mean post-shift weighted accuracy of
+    the migrating run over the static run — the detector's raison
+    d'etre; < 1 would mean migration is hurting.
+  * ``recovery_rounds``: rounds after the swap until the migrating run
+    first matches the static run's same-round accuracy (the acceptance
+    bar is <= 10; 0 = never behind).
+
+Schema + gate semantics: docs/benchmarks.md.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.bench_io import record_run
+from repro.core.fedgroup import FedGroupTrainer
+from repro.data.generators import mnist_like
+from repro.fed.engine import FedConfig
+from repro.fed.ifca import IFCATrainer
+from repro.fed.population import (Population, PopulationConfig, ShiftConfig,
+                                  ShiftSpec)
+from repro.fed.store import ArrayClientStore
+from repro.models.paper_models import mclr
+
+
+def _cfg(**kw) -> FedConfig:
+    base = dict(clients_per_round=10, local_epochs=2, batch_size=5, lr=0.05,
+                n_groups=3, pretrain_scale=4, seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _run(cls, model, data, rounds, shift, **cfg_kw):
+    pop = Population(ArrayClientStore(data), PopulationConfig(shift=shift))
+    tr = cls(model, None, _cfg(**cfg_kw), population=pop)
+    h = tr.run(rounds)
+    tr.close()
+    accs = np.asarray([r.weighted_acc for r in h.rounds])
+    return tr, accs
+
+
+def _recovery_rounds(acc_mig, acc_static, at):
+    """First k >= 1 with migrating acc >= static acc at round at+k
+    (0 when the migrating run never falls behind; -1 = no recovery)."""
+    behind = False
+    for k in range(1, len(acc_mig) - at):
+        if acc_mig[at + k] >= acc_static[at + k]:
+            if behind:
+                return k
+        else:
+            behind = True
+    return 0 if not behind else -1
+
+
+def main(quick: bool = False):
+    model = mclr(16, 10)
+    data = mnist_like(seed=0, n_clients=40, classes_per_client=2,
+                      total_train=2000, dim=16)
+    at = 4 if quick else 6
+    post = 6 if quick else 10
+    rounds = at + post
+    shift = ShiftConfig([ShiftSpec(at=at, frac=0.5)])
+
+    tr_static, acc_static = _run(FedGroupTrainer, model, data, rounds, shift)
+    tr_mig, acc_mig = _run(FedGroupTrainer, model, data, rounds, shift,
+                           shift_threshold=0.35)
+    _, acc_ifca = _run(IFCATrainer, model, data, rounds, shift)
+
+    post_static = float(acc_static[at:].mean())
+    post_mig = float(acc_mig[at:].mean())
+    migrations = int(tr_mig.obs.registry.get("rounds.migrations"))
+    checks = int(tr_mig.obs.registry.get("rounds.shift_checks"))
+
+    metrics = {"quick": quick, "rounds": rounds, "shift_at": at,
+               "migrations": migrations, "shift_checks": checks,
+               "post_shift_acc_static": post_static,
+               "post_shift_acc_migrate": post_mig,
+               "post_shift_acc_ifca": float(acc_ifca[at:].mean()),
+               "final_acc_static": float(acc_static[-1]),
+               "final_acc_migrate": float(acc_mig[-1]),
+               "migration_vs_static": post_mig / max(post_static, 1e-9),
+               "recovery_rounds": _recovery_rounds(acc_mig, acc_static, at)}
+    regression, details = record_run(
+        "BENCH_shift.json", metrics,
+        watch=[("migration_vs_static", "min")])
+    return {"migration_vs_static": round(metrics["migration_vs_static"], 3),
+            "recovery_rounds": metrics["recovery_rounds"],
+            "migrations": migrations,
+            "post_shift_acc_migrate": round(post_mig, 3),
+            "post_shift_acc_static": round(post_static, 3),
+            "regression": regression, "regression_details": details}

@@ -15,7 +15,16 @@ Key pieces, mapped to the paper:
   * ablations: RCC (random cluster centres), RAC (randomly assign cold).
 
 Group membership is *static* once assigned (the paper's main efficiency
-argument vs IFCA/FeSEM, which reschedule every round).
+argument vs IFCA/FeSEM, which reschedule every round) — unless
+``FedConfig.shift_threshold`` turns on the FlexCFL-style *shift detector*:
+every ``shift_check_every`` rounds, each assigned cohort client with a
+cached eq.-9 direction is re-probed with one pre-training pass from the
+current auxiliary model, and a client whose fresh direction drifted beyond
+the threshold (cosine dissimilarity ``(1 - cos)/2``) is re-routed through
+eq. 9 against the current group update directions — a *migration*, counted
+into the ``rounds.migrations`` metric. The stale cached direction row is
+invalidated before the fresh one is cached, so any later re-cold-start
+recomputes rather than reuses it.
 
 Group state is an m-stacked pytree (leading axis = group) and every round is
 ONE device dispatch through ``fed.rounds.make_round_executor`` — the serial
@@ -64,9 +73,52 @@ class FedGroupTrainer(GroupedTrainer):
             max_samples=self._max_samples)
         self.cold_started = False
         self.last_cold = 0          # newcomers cold-started last round
+        # shift detector (FedConfig.shift_threshold): pinned-mode direction
+        # cache (population mode keeps rows in the ClientStateTable), the
+        # check-cadence clock, and the last check's (probed, migrated)
+        self._pin_dirs = None
+        self._shift_tick = 0
+        self._shift_last = (0, 0)
+        self._last_shifted = np.empty(0, np.int64)
 
     def _exec_spec(self) -> dict:
         return {"n_groups": self.m, "eta_g": self.cfg.eta_g}
+
+    # ------------------------------------------------------------------
+    # Cached eq.-9 directions: one cache API over both feeding modes —
+    # the persistent ClientStateTable rows when streaming, a trainer-owned
+    # lazy table when pinned (materialized only when the detector needs it)
+    # ------------------------------------------------------------------
+    def _shift_enabled(self) -> bool:
+        return self.cfg.shift_threshold is not None
+
+    def _set_dirs(self, idx, rows):
+        rows = np.asarray(rows, np.float32)
+        if self.population is not None:
+            self.population.state.set_pretrain_dir(idx, rows)
+            return
+        if self._pin_dirs is None:
+            from repro.fed.store import _LazyRows
+            self._pin_dirs = _LazyRows(np.zeros(rows.shape[-1], np.float32))
+        self._pin_dirs.scatter(idx, rows)
+
+    def _has_dirs(self, idx) -> np.ndarray:
+        if self.population is not None:
+            return self.population.state.has_pretrain_dir(idx)
+        if self._pin_dirs is None:
+            return np.zeros(len(np.asarray(idx)), bool)
+        return self._pin_dirs.has(idx)
+
+    def _get_dirs(self, idx) -> np.ndarray:
+        if self.population is not None:
+            return self.population.state.get_pretrain_dir(idx)
+        return self._pin_dirs.gather(idx)
+
+    def _invalidate_dirs(self, idx):
+        if self.population is not None:
+            self.population.state.invalidate_pretrain_dir(idx)
+        elif self._pin_dirs is not None:
+            self._pin_dirs.delete(idx)
 
     # ------------------------------------------------------------------
     # Group cold start (Algorithm 3)
@@ -128,6 +180,10 @@ class FedGroupTrainer(GroupedTrainer):
         # flattening the already-aggregated per-leaf means equals Wj @ dW
         # without a second pass over the (n_pre, d_w) update matrix
         self.group_delta = jax.vmap(flatten_updates)(mean_delta)  # (m, d_w)
+        if self.population is not None or self._shift_enabled():
+            # cache the pre-trained clients' update directions too, so the
+            # Alg.-3 founders are as shift-detectable as eq.-9 newcomers
+            self._set_dirs(pre_idx, np.asarray(dW))
         self.cold_started = True
         return pre_idx, labels
 
@@ -149,20 +205,80 @@ class FedGroupTrainer(GroupedTrainer):
         keys = jax.random.split(sk, len(cold_idx))
         deltas, _ = self.pretrain_solver(self.params, x, y, n, keys)
         dpre = jax.vmap(flatten_updates)(deltas)               # (c, d_w)
-        if self.population is not None:
-            # cache the pre-training directions in the persistent state
-            # table (newcomer analytics / re-clustering reuse them)
-            self.population.state.set_pretrain_dir(cold_idx, np.asarray(dpre))
+        if self.population is not None or self._shift_enabled():
+            # cache the pre-training directions (persistent state table
+            # when streaming, trainer-owned rows when pinned): newcomer
+            # analytics, re-clustering and the shift detector reuse them
+            self._set_dirs(cold_idx, np.asarray(dpre))
         sim = measures.cosine_similarity_matrix(dpre, self.group_delta)
         dis = (-sim + 1.0) / 2.0                               # (c, m)
         self._adopt_membership(cold_idx, np.asarray(jnp.argmin(dis, axis=1)))
+
+    # ------------------------------------------------------------------
+    # Shift detection + migration (FlexCFL-style, FedConfig.shift_threshold)
+    # ------------------------------------------------------------------
+    def _maybe_shift(self, idx):
+        """Probe the cohort's assigned, direction-cached clients for
+        distribution shift and migrate the drifted ones through eq. 9.
+
+        One pre-training pass from the current auxiliary model per probed
+        client (accounted as 1 model down + 1 update up); drift is the
+        normalized cosine dissimilarity ``(1 - cos)/2`` between the fresh
+        and cached directions. A drifted client's stale cached row is
+        *invalidated* first — a later re-cold-start must recompute, never
+        reuse it — then the fresh direction is cached and the client is
+        re-assigned by eq. 9 against the current group update directions
+        (an ``_adopt_membership`` write, so migrations hit the registry).
+        Returns the migrated client ids."""
+        cfg = self.cfg
+        none = np.empty(0, np.int64)
+        self._last_shifted = none
+        if not self._shift_enabled() or not self.cold_started \
+                or self.group_delta is None:
+            return none
+        tick = self._shift_tick
+        self._shift_tick += 1
+        if tick % max(int(cfg.shift_check_every), 1) != 0:
+            return none
+        idx = np.asarray(idx)
+        assigned = idx[self.membership[idx] >= 0]
+        checked = assigned[self._has_dirs(assigned)]
+        self._shift_last = (len(checked), 0)
+        if len(checked) == 0:
+            return none
+        self.obs.registry.inc("rounds.shift_checks", len(checked))
+        self.comm_params += 2 * len(checked) * self.model_size
+        x, y, n = self._client_batch(checked)
+        self.key, sk = jax.random.split(self.key)
+        keys = jax.random.split(sk, len(checked))
+        deltas, _ = self.pretrain_solver(self.params, x, y, n, keys)
+        fresh = np.asarray(jax.vmap(flatten_updates)(deltas))  # (c, d_w)
+        cached = self._get_dirs(checked)
+        dot = np.sum(fresh * cached, axis=1)
+        den = np.linalg.norm(fresh, axis=1) * np.linalg.norm(cached, axis=1)
+        drift = (1.0 - dot / np.maximum(den, 1e-12)) / 2.0
+        moved = drift > float(cfg.shift_threshold)
+        shifted = checked[moved].astype(np.int64)
+        self._shift_last = (len(checked), len(shifted))
+        if len(shifted) == 0:
+            return none
+        self._invalidate_dirs(shifted)
+        self._set_dirs(shifted, fresh[moved])
+        sim = measures.cosine_similarity_matrix(
+            jnp.asarray(fresh[moved]), self.group_delta)
+        dis = (-sim + 1.0) / 2.0
+        self._adopt_membership(shifted, np.asarray(jnp.argmin(dis, axis=1)))
+        self._last_shifted = shifted
+        return shifted
 
     # ------------------------------------------------------------------
     # Round-block staging: blocks break on host events (Alg. 3 cold start,
     # eq.-9 newcomers in a staged cohort) — membership is static otherwise
     # ------------------------------------------------------------------
     def _host_round_pre(self) -> bool:
-        return not self.cold_started
+        # shift detection is host work between every round, so an enabled
+        # detector pins the trainer to the per-round path (no scan blocks)
+        return not self.cold_started or self._shift_enabled()
 
     def _needs_host(self, idx) -> bool:
         return bool((self.membership[idx] < 0).any())
@@ -187,11 +303,15 @@ class FedGroupTrainer(GroupedTrainer):
         # global model + update directions (self.params / self.group_delta
         # are re-pointed at the folded carry after every fold)
         idx = np.asarray(idx)
+        # shift check precedes the cold segment, exactly as in round();
+        # migrated ids ride out with the cold ids so the pinned async loop
+        # patches their membership rows into the device carry
+        shifted = self._maybe_shift(idx)
         cold = idx[self.membership[idx] < 0]
         self.last_cold = len(cold)
         self.comm_params += 2 * len(cold) * self.model_size
         self.client_cold_start(cold)
-        return cold
+        return np.concatenate([shifted, cold]) if len(shifted) else cold
 
     def _async_stream_arg(self, idx):
         return jnp.asarray(self.membership[idx], jnp.int32)
@@ -222,18 +342,42 @@ class FedGroupTrainer(GroupedTrainer):
     def _ckpt_meta_extra(self) -> dict:
         return {"cold_started": bool(self.cold_started),
                 "last_cold": int(self.last_cold),
-                "has_group_delta": self.group_delta is not None}
+                "has_group_delta": self.group_delta is not None,
+                "shift_tick": int(self._shift_tick)}
 
     def _ckpt_apply_extra(self, extra: dict):
         self.cold_started = bool(extra["cold_started"])
         self.last_cold = int(extra["last_cold"])
         if not extra["has_group_delta"]:
             self.group_delta = None
+        self._shift_tick = int(extra.get("shift_tick", 0))
+
+    def _ckpt_state_arrays(self) -> dict:
+        # pinned-mode direction cache (population rows checkpoint through
+        # the state table); variable row count is fine — the load template
+        # is archive-driven
+        out = super()._ckpt_state_arrays()
+        if self._pin_dirs is not None:
+            for k, v in self._pin_dirs.ckpt_arrays().items():
+                out[f"fg_dir_{k}"] = v
+        return out
+
+    def _ckpt_apply_state(self, arrays: dict):
+        super()._ckpt_apply_state(arrays)
+        if "fg_dir_ids" in arrays:
+            from repro.fed.store import _LazyRows
+            self._pin_dirs = _LazyRows.from_ckpt(
+                {k: arrays[f"fg_dir_{k}"]
+                 for k in ("ids", "rows", "default")})
 
     def _round_record(self, m) -> dict:
         rec = super()._round_record(m)
         rec["cold"] = int(self.last_cold)
         rec["eta_g"] = float(self.cfg.eta_g)
+        if self._shift_enabled():
+            checked, migrated = self._shift_last
+            rec["shift_checked"] = int(checked)
+            rec["shift_migrations"] = int(migrated)
         return rec
 
     # ------------------------------------------------------------------
@@ -245,6 +389,8 @@ class FedGroupTrainer(GroupedTrainer):
 
         if idx is None:
             idx = self._select()
+        idx = np.asarray(idx)
+        self._maybe_shift(idx)
         cold = idx[self.membership[idx] < 0]
         self.last_cold = len(cold)
         # cold start: 1 global model down + 1 pretrain update up per newcomer

@@ -125,6 +125,22 @@ class FedConfig:
     async_max_retries: int = 3
     async_backoff: float = 0.05
     async_backoff_cap: float = 1.0
+    # distribution-shift migration (FedGroup, FlexCFL-style): when set,
+    # every `shift_check_every` rounds each assigned cohort client with a
+    # cached eq.-9 direction is re-probed (one pre-training pass from the
+    # current auxiliary model); cosine drift (1 - cos)/2 between the fresh
+    # and cached directions beyond `shift_threshold` invalidates the cached
+    # row and re-routes the client through eq. 9 — a migration, counted in
+    # rounds.migrations. None (default) disables detection entirely and
+    # preserves the static trainer's rng streams bit for bit.
+    shift_threshold: float | None = None
+    shift_check_every: int = 1
+    # strategy-zoo knobs (fed.strategies): FedClust compares only the
+    # trailing `fedclust_frac` of the flattened weights (the classifier
+    # head in practice); LCFL keeps a client in its current group unless a
+    # rival group's loss beats it by more than `lcfl_margin` (hysteresis)
+    fedclust_frac: float = 0.25
+    lcfl_margin: float = 0.1
     # telemetry (repro.obs): setting a directory enables span tracing and
     # streams per-round JSONL records + a Chrome trace + run_summary.json
     # there (docs/observability.md); None leaves the tracer a no-op
@@ -931,6 +947,19 @@ class FedAvgTrainer:
     def _ckpt_apply_extra(self, extra: dict):
         pass
 
+    def _ckpt_state_arrays(self) -> dict:
+        """Framework-owned host arrays of *save-time* shape, merged into
+        the checkpoint's ``state`` sub-tree next to the population tables
+        (FedGroup: the pinned-mode eq.-9 direction cache). Keys must not
+        collide with ``Population.ckpt_state``'s; the load template is
+        archive-driven, so variable row counts are fine."""
+        return {}
+
+    def _ckpt_apply_state(self, arrays: dict):
+        """Restore hook for ``_ckpt_state_arrays`` (receives the full
+        ``state`` sub-tree; pick out the framework's own keys)."""
+        pass
+
     def save_checkpoint(self, path: str | None = None) -> str:
         """Atomic full-state snapshot after ``len(history.rounds)``
         completed rounds: model/group state + both rng streams + metrics +
@@ -954,6 +983,7 @@ class FedAvgTrainer:
                 # registry BEFORE the snapshot below — every degradation
                 # counter reaches the checkpoint through one surface
                 state, pop_meta = self.population.ckpt_state()
+            state = dict(state, **self._ckpt_state_arrays())
             meta = {"framework": self.framework, "t": t,
                     "n_clients": int(self.n_clients),
                     "rng": self.rng.bit_generator.state,
@@ -1034,6 +1064,8 @@ class FedAvgTrainer:
             self.population.ckpt_restore(
                 {k: np.asarray(v) for k, v in tree["state"].items()},
                 meta["population"])
+        self._ckpt_apply_state(
+            {k: np.asarray(v) for k, v in tree["state"].items()})
         # cumulative counters come back through the unified registry
         # snapshot (format v3); pre-v3 archives carried only async_stats
         obs_snap = meta.get("obs")

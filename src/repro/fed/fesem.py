@@ -92,7 +92,8 @@ class FeSEMTrainer(GroupedTrainer):
         # per-step E-step state from the carried matrix (idx already
         # redirected to the trash row for zero-weight padded lanes), and
         # the updated matrix back out of the M-step scatter
-        kw["make_state"] = lambda aux, idx: {"local_flat": aux, "idx": idx}
+        kw["make_state"] = lambda aux, idx, mem: {"local_flat": aux,
+                                                  "idx": idx}
         kw["state_to_aux"] = lambda st: st["local_flat"]
         return kw
 

@@ -28,7 +28,25 @@ is the large-N replacement. A ``Population`` bundles
     asynchrony is invisible to program semantics (streamed results stay
     bit-identical to pinned — docs/scaling.md spells out the guarantee).
 
-The population is also the runtime's *failure domain*: a ``FaultConfig``
+The population is also the runtime's *distribution-shift stage*: a
+``ShiftConfig`` next to the diurnal/fault traces scripts label-swap and
+gradual concept-drift scenarios (``ShiftSpec``) — pure deterministic
+functions of (round, client id, seed) applied to the host label arrays on
+every gather path (train cohorts, ad-hoc ``device_batch`` gathers, eval
+blocks) before fault corruption and the H2D put, so streamed, prefetched
+and resumed runs all see bit-identical shifted data and checkpoints need
+carry nothing new:
+
+>>> import numpy as np
+>>> from repro.fed.population import ShiftConfig, ShiftSpec, apply_shift
+>>> sh = ShiftConfig([ShiftSpec(at=2, classes=(0, 2))])
+>>> y = np.array([[0, 1, 2]])
+>>> apply_shift(sh, 4, 3, 1, np.array([0]), y).tolist()   # before t=2
+[[0, 1, 2]]
+>>> apply_shift(sh, 4, 3, 2, np.array([0]), y).tolist()   # 0<->2 swapped
+[[2, 1, 0]]
+
+It is also the runtime's *failure domain*: a ``FaultConfig``
 next to the diurnal traces scripts per-round scenarios (mid-round client
 death, straggler delays, corrupted NaN/Inf/blown-up payloads, a killed
 writer thread) against exactly the production code paths;
@@ -269,6 +287,103 @@ class FaultConfig:
 
 
 @dataclass
+class ShiftSpec:
+    """One scripted distribution shift over the client population.
+
+    at          first round the shift is live (train cohorts gathered for
+                round ``at`` and eval blocks from round ``at`` on see it).
+    kind        "label_swap" — every affected client's labels are remapped
+                through one cycle of ``classes`` at once (the classic
+                abrupt concept shift); "drift" — the remap phases in
+                sample-by-sample over ``duration`` rounds (gradual concept
+                drift): each sample flips at a fixed deterministic point of
+                the ramp, so the set of remapped samples grows
+                monotonically and any given round is reproducible.
+    frac        fraction of clients affected (chosen by a seeded hash of
+                the client id — the same clients every round / replay).
+    classes     label cycle, e.g. ``(0, 2)`` swaps 0<->2 and ``(1, 2, 3)``
+                rotates 1->2->3->1; None cycles *all* classes.
+    duration    drift ramp length in rounds (ignored for label_swap).
+    """
+    at: int
+    kind: str = "label_swap"
+    frac: float = 1.0
+    classes: tuple | None = None
+    duration: int = 0
+
+
+@dataclass
+class ShiftConfig:
+    """Scripted distribution-shift scenarios (``PopulationConfig.shift``):
+    every ``ShiftSpec`` in ``specs`` composes, in order, onto the host
+    label arrays of each gather; ``seed`` drives the affected-client and
+    per-sample drift choices so a scenario replays identically across
+    prefetch depths, restarts and checkpoint resumes (the transform is a
+    pure function of (round, client id, seed) — nothing is persisted)."""
+    specs: list
+    seed: int = 0
+
+
+def shift_client_mask(n_clients: int, seed: int, spec_index: int,
+                      frac: float) -> np.ndarray:
+    """(N,) bool mask of the clients a spec affects — a fixed seeded draw,
+    identical every round, so a shifted client stays shifted."""
+    if frac >= 1.0:
+        return np.ones(n_clients, bool)
+    rng = np.random.default_rng([int(seed), 0x5F1F7, int(spec_index)])
+    return rng.random(n_clients) < frac
+
+
+def shift_label_map(n_classes: int, classes) -> np.ndarray:
+    """Label permutation for one spec: cycle ``classes`` by one position
+    (identity elsewhere); ``classes=None`` cycles all labels."""
+    mapping = np.arange(int(n_classes), dtype=np.int64)
+    cyc = np.asarray(classes if classes is not None
+                     else np.arange(int(n_classes)), np.int64)
+    if len(cyc) >= 2:
+        mapping[cyc] = np.roll(cyc, -1)
+    return mapping
+
+
+def apply_shift(cfg: "ShiftConfig | None", n_clients: int, n_classes: int,
+                t, idx, y):
+    """Apply every live spec of ``cfg`` to the (K, max_n) label block ``y``
+    of clients ``idx`` as seen at round ``t``. Pure and deterministic:
+    a copy is returned only when something actually changes. Padding rows
+    beyond each client's ``n`` are remapped too, harmlessly — every
+    consumer masks by the sample counts."""
+    if cfg is None or t is None or int(t) < 0 or not cfg.specs:
+        return y
+    t = int(t)
+    idx = np.asarray(idx, np.int64)
+    out = None
+    for si, spec in enumerate(cfg.specs):
+        if t < spec.at:
+            continue
+        mask = shift_client_mask(n_clients, cfg.seed, si, spec.frac)
+        rows = np.where(mask[idx])[0]
+        if len(rows) == 0:
+            continue
+        if out is None:
+            out = np.array(y, copy=True)
+        mapping = shift_label_map(n_classes, spec.classes)
+        if spec.kind == "label_swap":
+            out[rows] = mapping[out[rows]]
+        elif spec.kind == "drift":
+            p = 1.0 if spec.duration <= 0 else \
+                min(max((t - spec.at + 1) / spec.duration, 0.0), 1.0)
+            for r in rows:
+                u = np.random.default_rng(
+                    [int(cfg.seed), 0xD51F7, si, int(idx[r])]
+                ).random(out.shape[1])
+                sel = u < p
+                out[r, sel] = mapping[out[r, sel]]
+        else:
+            raise ValueError(f"unknown shift kind {spec.kind!r}")
+    return y if out is None else out
+
+
+@dataclass
 class PopulationConfig:
     """Knobs of the streamed population (sampling, availability, arrivals,
     prefetch, eval). ``seed=None`` inherits the trainer's ``cfg.seed`` so a
@@ -300,6 +415,7 @@ class PopulationConfig:
     deadline: float | None = None
     stage_chunks: int = 8
     faults: FaultConfig | None = None   # scripted per-round fault scenarios
+    shift: ShiftConfig | None = None    # scripted distribution shifts
 
 
 @dataclass
@@ -587,25 +703,41 @@ class Population:
     def _n_shards(self) -> int:
         return parallel_lib.mesh_data_shards(self.mesh)
 
-    def _gather_put(self, split: str, idx):
+    def _shift_host(self, t, idx, arrays):
+        """Apply the scripted distribution shift (if any) to one gathered
+        host block — always before fault corruption and the H2D put."""
+        if self.cfg.shift is None:
+            return arrays
+        x, y, n = arrays
+        return (x, apply_shift(self.cfg.shift, self.store.n_clients,
+                               self.store.n_classes, t, idx, y), n)
+
+    def _gather_put(self, split: str, idx, t=None):
         """Store gather + H2D for a cohort. Over a ``ShardedClientStore``
         + a mesh this goes per shard: each data slice's rows are gathered
         and device_put separately, then assembled into one global array
         (``fed.parallel.put_sharded_cohort``) — no host-side concatenation
         of the full cohort, which is what a real multi-host deployment
-        cannot do. Everything else takes the single-gather path."""
+        cannot do. Everything else takes the single-gather path. ``t`` is
+        the shift clock of the round this gather feeds (None = no shift)."""
         store = self.store
+        idx = np.asarray(idx, np.int64)
         if self.mesh is not None and isinstance(store, ShardedClientStore):
             parts = store._gather_shards(split, idx, self._n_shards())
             if parts is not None:
+                if self.cfg.shift is not None:
+                    slices = shard_cohort_slices(len(idx), self._n_shards())
+                    parts = [self._shift_host(t, idx[lo:hi], p)
+                             for (lo, hi), p in zip(slices, parts)]
                 with self.obs.span("h2d", rows=int(len(idx))):
                     return parallel_lib.put_sharded_cohort(self.mesh, parts)
-        return self._put(store._gather(split, np.asarray(idx, np.int64)))
+        return self._put(self._shift_host(t, idx, store._gather(split, idx)))
 
     def device_batch(self, idx):
         """(x, y, n) on device for an arbitrary id set. Ids inside the live
         cohort are sliced from its already-transferred arrays (the cold-
-        start subset case); anything else is a fresh store gather."""
+        start subset case); anything else is a fresh store gather (at the
+        live cohort's shift clock)."""
         idx = np.asarray(idx)
         c = self._cohort
         if c is not None:
@@ -614,7 +746,7 @@ class Population:
                 if len(pos) == len(c.idx) and np.all(pos == np.arange(len(pos))):
                     return c.x, c.y, c.n
                 return c.x[pos], c.y[pos], c.n[pos]
-        return self._gather_put("train", idx)
+        return self._gather_put("train", idx, t=self.rounds_streamed - 1)
 
     # -- persistent state (per-shard async scatter) ------------------------
     def gather_local_flat(self, idx) -> np.ndarray:
@@ -715,7 +847,9 @@ class Population:
         for lo in range(0, len(idx), step):
             if delay:
                 time.sleep(delay)
-            part = self.store._gather("train", idx[lo:lo + step])
+            part = self._shift_host(
+                t, idx[lo:lo + step],
+                self.store._gather("train", idx[lo:lo + step]))
             part = self._corrupt(t, spec, part, lo, len(idx))
             with st.cond:
                 if st.claimed:
@@ -747,11 +881,12 @@ class Population:
                                                spec.corrupt > 0):
                         if spec.straggle > 0:
                             time.sleep(spec.straggle)
-                        host = self.store._gather("train", idx)
+                        host = self._shift_host(
+                            t, idx, self.store._gather("train", idx))
                         x, y, n = self._put(
                             self._corrupt(t, spec, host, 0, len(idx)))
                     else:
-                        x, y, n = self._gather_put("train", idx)
+                        x, y, n = self._gather_put("train", idx, t=t)
                     cohort = Cohort(t, idx, x, y, n, n_new,
                                     sched_state=snap)
                 while not self._stop.is_set():
@@ -826,11 +961,12 @@ class Population:
                                          spec.corrupt > 0):
                     if spec.straggle > 0:
                         time.sleep(spec.straggle)
-                    host = self.store._gather("train", idx)
+                    host = self._shift_host(
+                        t, idx, self.store._gather("train", idx))
                     arrays = self._put(
                         self._corrupt(t, spec, host, 0, len(idx)))
                 else:
-                    arrays = self._gather_put("train", idx)
+                    arrays = self._gather_put("train", idx, t=t)
                 return Cohort(t, idx, *arrays, n_new, sched_state=snap)
             step = self._stage_chunks(len(idx))
             n_chunks = -(-len(idx) // step)
@@ -847,7 +983,9 @@ class Population:
                     break
                 if delay:
                     time.sleep(delay)
-                part = self.store._gather("train", idx[lo:lo + step])
+                part = self._shift_host(
+                    t, idx[lo:lo + step],
+                    self.store._gather("train", idx[lo:lo + step]))
                 parts.append(self._corrupt(t, spec, part, lo, len(idx)))
                 staged += len(part[2])
             arrays = self._put(tuple(np.concatenate([p[i] for p in parts])
@@ -993,5 +1131,6 @@ class Population:
         B = max(int(self.cfg.eval_batch), 1)
         for lo in range(0, len(idx), B):
             block = idx[lo:lo + B]
-            x, y, n = self._gather_put("test", block)
+            x, y, n = self._gather_put("test", block,
+                                       t=self.rounds_streamed - 1)
             yield block, x, y, n

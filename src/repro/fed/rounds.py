@@ -285,11 +285,14 @@ def make_block_executor(model, *, epochs: int, batch_size: int, lr: float,
     reproduces the per-round path bit for bit — and the per-round
     quarantine counts (all 0 when ``quarantine`` is off).
 
-    make_state(aux, idx) builds the per-round assignment state from the
-    carried ``aux`` (FeSEM: {"local_flat": aux, "idx": idx}); state_to_aux
-    extracts the updated aux from ``RoundOutput.assign_state``. With
-    ``assign_fn`` but no ``make_state`` the state is None (IFCA); without
-    ``assign_fn`` membership is gathered from the carry (static frameworks).
+    make_state(aux, idx, membership) builds the per-round assignment state
+    from the carried ``aux`` and the carried (N+1,) membership table
+    (FeSEM: {"local_flat": aux, "idx": idx}; LCFL gathers the cohort's
+    current groups from the membership carry for its hysteresis rule);
+    state_to_aux extracts the updated aux from ``RoundOutput.assign_state``.
+    With ``assign_fn`` but no ``make_state`` the state is None (IFCA);
+    without ``assign_fn`` membership is gathered from the carry (static
+    frameworks).
 
     jit with ``donate_argnums=(0,)`` (``fed.parallel
     .make_sharded_block_executor`` does) so the carry buffers are reused
@@ -314,7 +317,7 @@ def make_block_executor(model, *, epochs: int, batch_size: int, lr: float,
             if assign_fn is None:
                 arg = c["membership"][ix]
             elif make_state is not None:
-                arg = make_state(c["aux"], ix_eff)
+                arg = make_state(c["aux"], ix_eff, c["membership"])
             else:
                 arg = None
             out = core(c["group_params"], arg, x, y, n, ks, al)
@@ -408,7 +411,7 @@ def make_async_dispatch_executor(model, *, epochs: int, batch_size: int,
         if assign_fn is None:
             arg = carry["membership"][idx]
         elif make_state is not None:
-            arg = make_state(carry["aux"], ix_eff)
+            arg = make_state(carry["aux"], ix_eff, carry["membership"])
         else:
             arg = None
         out = core(carry["group_params"], arg, x, y, n, keys, alive)

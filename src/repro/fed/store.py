@@ -363,6 +363,19 @@ class _LazyRows:
         for r, i in enumerate(np.asarray(idx)):
             self.rows[int(i)] = rows[r].copy()
 
+    def delete(self, idx):
+        """Drop materialized rows (untouched ids are a no-op) — the shift
+        detector's cache invalidation: a deleted row reads back as the
+        default until the next scatter re-materializes it."""
+        for i in np.asarray(idx).ravel():
+            self.rows.pop(int(i), None)
+
+    def has(self, idx) -> np.ndarray:
+        """(len(idx),) bool — which ids have a materialized (non-default)
+        row."""
+        return np.array([int(i) in self.rows for i in np.asarray(idx)],
+                        bool)
+
     def __len__(self):
         return len(self.rows)
 
@@ -451,6 +464,19 @@ class ClientStateTable:
         if self._pretrain_dir is None:
             return None
         return self._pretrain_dir.gather(idx)
+
+    def has_pretrain_dir(self, idx) -> np.ndarray:
+        """(len(idx),) bool — which clients have a cached eq.-9 direction."""
+        if self._pretrain_dir is None:
+            return np.zeros(len(np.asarray(idx)), bool)
+        return self._pretrain_dir.has(idx)
+
+    def invalidate_pretrain_dir(self, idx):
+        """Drop cached eq.-9 directions (shift migration / re-cold-start):
+        a migrated client's next cold start must recompute its direction
+        from fresh pre-training instead of reusing the stale cached row."""
+        if self._pretrain_dir is not None:
+            self._pretrain_dir.delete(idx)
 
     def touched_rows(self) -> int:
         return sum(len(t) for t in (self._local_flat, self._pretrain_dir)

@@ -60,6 +60,8 @@ ROUND_SCHEMA = (
     MetricSpec("rounds.migrations", COUNTER, "cohort group-membership flips"),
     MetricSpec("rounds.cold_started", COUNTER, "eq.-9 newcomers cold-started"),
     MetricSpec("rounds.checkpoints", COUNTER, "checkpoints written"),
+    MetricSpec("rounds.shift_checks", COUNTER,
+               "clients probed by the shift detector"),
 )
 
 

@@ -12,6 +12,21 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 
+@pytest.fixture(autouse=True)
+def _no_default_telemetry_leak():
+    """No test may leak a process-default telemetry: a leaked default makes
+    every later trainer in the process silently record into a dead
+    registry (set_default is for harnesses like benchmarks/run.py, which
+    restore it)."""
+    from repro.obs import telemetry
+    before = telemetry.get_default()
+    yield
+    after = telemetry.get_default()
+    assert after is before, (
+        f"test leaked a process-default telemetry: {after!r} "
+        f"(was {before!r}) — wrap set_default() in try/finally")
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)

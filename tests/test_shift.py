@@ -1,0 +1,370 @@
+"""Distribution-shift scenarios + FedGroup's shift-migration path.
+
+Three layers, matching the runtime's:
+
+  * the scripted generators (``ShiftSpec``/``apply_shift``) are pure and
+    deterministic per seed — label swaps are abrupt class-cycle remaps,
+    drift phases samples in monotonically;
+  * the population applies them identically on every feeding path —
+    prefetched, synchronous, eval — so streamed runs replay bit-for-bit
+    at any prefetch depth and across kill-and-resume;
+  * FedGroup's detector probes cached eq.-9 directions, invalidates the
+    stale rows (the cache-staleness fix), migrates drifted clients and
+    accounts everything in the telemetry registry.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt_io
+from repro.core.fedgroup import FedGroupTrainer
+from repro.data.generators import mnist_like
+from repro.fed.engine import FedAvgTrainer, FedConfig
+from repro.fed.fesem import FeSEMTrainer
+from repro.fed.ifca import IFCATrainer
+from repro.fed.population import (Population, PopulationConfig, ShiftConfig,
+                                  ShiftSpec, apply_shift, shift_client_mask,
+                                  shift_label_map)
+from repro.fed.store import ArrayClientStore, ClientStateTable
+
+pytestmark = pytest.mark.shift
+
+
+@pytest.fixture(scope="module")
+def small_data():
+    return mnist_like(seed=0, n_clients=40, classes_per_client=2,
+                      total_train=2000, dim=16)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    from repro.models.paper_models import mclr
+    return mclr(16, 10)
+
+
+def _cfg(**kw):
+    base = dict(n_rounds=4, clients_per_round=8, local_epochs=2,
+                batch_size=5, lr=0.05, n_groups=3, pretrain_scale=4, seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _assert_tree_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+SWAP_ALL = ShiftConfig([ShiftSpec(at=2)])    # cycle every class at t=2
+
+
+# ---------------------------------------------------------------------------
+# generators: pure, deterministic, composable
+# ---------------------------------------------------------------------------
+class TestGenerators:
+    def test_label_map_cycles(self):
+        m = shift_label_map(4, (0, 2))
+        assert m.tolist() == [2, 1, 0, 3]            # 0<->2, others fixed
+        m = shift_label_map(4, (1, 2, 3))
+        assert m.tolist() == [0, 2, 3, 1]            # 1->2->3->1
+        assert shift_label_map(3, None).tolist() == [1, 2, 0]
+        assert shift_label_map(3, (2,)).tolist() == [0, 1, 2]  # degenerate
+
+    def test_inactive_before_at_and_identity_object(self):
+        y = np.arange(6).reshape(2, 3)
+        out = apply_shift(SWAP_ALL, 5, 10, 1, np.arange(2), y)
+        assert out is y                              # untouched, not copied
+        assert apply_shift(None, 5, 10, 9, np.arange(2), y) is y
+        assert apply_shift(SWAP_ALL, 5, 10, -1, np.arange(2), y) is y
+
+    def test_label_swap_is_abrupt_and_stable(self):
+        y = np.array([[0, 1, 2, 3]])
+        for t in (2, 3, 50):                         # same remap every round
+            out = apply_shift(SWAP_ALL, 4, 4, t, np.array([1]), y)
+            assert out.tolist() == [[1, 2, 3, 0]]
+        assert y.tolist() == [[0, 1, 2, 3]]          # input never mutated
+
+    def test_frac_masks_fixed_client_subset(self):
+        mask = shift_client_mask(200, seed=0, spec_index=0, frac=0.4)
+        again = shift_client_mask(200, seed=0, spec_index=0, frac=0.4)
+        np.testing.assert_array_equal(mask, again)   # per-seed deterministic
+        other = shift_client_mask(200, seed=1, spec_index=0, frac=0.4)
+        assert (mask != other).any()                 # seed actually matters
+        assert 0.2 < mask.mean() < 0.6
+        sh = ShiftConfig([ShiftSpec(at=0, frac=0.4)], seed=0)
+        idx = np.arange(200)
+        y = np.zeros((200, 3), np.int64)
+        out = apply_shift(sh, 200, 4, 0, idx, y)
+        np.testing.assert_array_equal((out != y).any(1), mask)
+
+    def test_drift_phases_in_monotonically(self):
+        sh = ShiftConfig([ShiftSpec(at=2, kind="drift", duration=5)])
+        y = np.tile(np.arange(4), (3, 6))
+        idx = np.arange(3)
+        changed = [int((apply_shift(sh, 3, 4, t, idx, y) != y).sum())
+                   for t in range(12)]
+        assert changed[0] == changed[1] == 0         # before onset
+        assert all(a <= b for a, b in zip(changed[2:], changed[3:]))
+        # fully phased in == the abrupt swap of the same cycle
+        full = apply_shift(ShiftConfig([ShiftSpec(at=2)]), 3, 4, 9, idx, y)
+        np.testing.assert_array_equal(
+            apply_shift(sh, 3, 4, 9, idx, y), full)
+
+    def test_specs_compose_in_order(self):
+        sh = ShiftConfig([ShiftSpec(at=0, classes=(0, 1)),
+                          ShiftSpec(at=2, classes=(1, 2))])
+        y = np.array([[0]])
+        # t=0: only 0<->1; t=2: 0 ->(swap 0,1)-> 1 ->(swap 1,2)-> 2
+        assert apply_shift(sh, 1, 3, 0, [0], y).tolist() == [[1]]
+        assert apply_shift(sh, 1, 3, 2, [0], y).tolist() == [[2]]
+
+    def test_unknown_kind_rejected(self):
+        sh = ShiftConfig([ShiftSpec(at=0, kind="meteor")])
+        with pytest.raises(ValueError, match="meteor"):
+            apply_shift(sh, 1, 3, 0, [0], np.array([[0]]))
+
+
+# ---------------------------------------------------------------------------
+# population feeding paths under shift
+# ---------------------------------------------------------------------------
+class TestPopulationShift:
+    def _collect(self, data, pop_kw, rounds=4):
+        pop = Population(ArrayClientStore(data), PopulationConfig(**pop_kw))
+        out = []
+        try:
+            pop.attach(_cfg())
+            for _ in range(rounds):
+                c = pop.next_cohort()
+                out.append((c.t, c.idx.copy(), np.asarray(c.y).copy()))
+        finally:
+            pop.close()
+        return out
+
+    def test_cohorts_shift_at_onset(self, small_data):
+        sh = ShiftConfig([ShiftSpec(at=2)])
+        got = self._collect(small_data, dict(shift=sh, prefetch=0))
+        store = ArrayClientStore(small_data)
+        for t, idx, y in got:
+            _, y_raw, _ = store._gather("train", idx)
+            if t < 2:
+                np.testing.assert_array_equal(y, y_raw)
+            else:
+                assert (y != y_raw).any()
+                np.testing.assert_array_equal(
+                    y, apply_shift(sh, store.n_clients, store.n_classes,
+                                   t, idx, y_raw))
+
+    def test_prefetched_equals_synchronous(self, small_data):
+        sh = ShiftConfig([ShiftSpec(at=1, frac=0.5),
+                          ShiftSpec(at=2, kind="drift", duration=3)])
+        a = self._collect(small_data, dict(shift=sh, prefetch=2))
+        b = self._collect(small_data, dict(shift=sh, prefetch=0))
+        for (ta, ia, ya), (tb, ib, yb) in zip(a, b):
+            assert ta == tb
+            np.testing.assert_array_equal(ia, ib)
+            np.testing.assert_array_equal(ya, yb)
+
+    def test_eval_blocks_follow_the_shift(self, small_data):
+        sh = ShiftConfig([ShiftSpec(at=1)])
+        pop = Population(ArrayClientStore(small_data),
+                         PopulationConfig(shift=sh, prefetch=0))
+        store = ArrayClientStore(small_data)
+        try:
+            pop.attach(_cfg())
+            pop.next_cohort()                        # consume round 0
+            blk = next(iter(pop.eval_batches(np.arange(5))))
+            _, y_raw, _ = store._gather("test", blk[0])
+            np.testing.assert_array_equal(np.asarray(blk[2]), y_raw)
+            pop.next_cohort()                        # round 1: shift live
+            blk = next(iter(pop.eval_batches(np.arange(5))))
+            _, y_raw, _ = store._gather("test", blk[0])
+            assert (np.asarray(blk[2]) != y_raw).any()
+        finally:
+            pop.close()
+
+    def test_streamed_run_deterministic_per_seed(self, small_model,
+                                                 small_data):
+        def go():
+            pop = Population(ArrayClientStore(small_data),
+                             PopulationConfig(shift=SWAP_ALL, prefetch=2))
+            tr = FedAvgTrainer(small_model, None, _cfg(), population=pop)
+            h = tr.run(4)
+            tr.close()
+            return tr, h
+
+        a, h_a = go()
+        b, h_b = go()
+        assert h_a.rounds == h_b.rounds
+        _assert_tree_equal(a.params, b.params)
+
+
+# ---------------------------------------------------------------------------
+# the direction-cache staleness fix (satellite a)
+# ---------------------------------------------------------------------------
+class TestDirectionCacheInvalidation:
+    def test_invalidate_drops_only_named_rows(self):
+        st = ClientStateTable(10)
+        st.set_pretrain_dir([1, 4, 7], np.ones((3, 5), np.float32))
+        np.testing.assert_array_equal(
+            st.has_pretrain_dir(np.arange(10)),
+            np.isin(np.arange(10), [1, 4, 7]))
+        st.invalidate_pretrain_dir([4, 9])           # 9 never set: no-op
+        np.testing.assert_array_equal(
+            st.has_pretrain_dir([1, 4, 7]), [True, False, True])
+        # a dropped row reads as the default again, not the stale value
+        np.testing.assert_array_equal(st.get_pretrain_dir([4]),
+                                      np.zeros((1, 5), np.float32))
+
+    def test_empty_table_is_safe(self):
+        st = ClientStateTable(4)
+        assert not st.has_pretrain_dir([0, 1]).any()
+        st.invalidate_pretrain_dir([0, 1])           # no table yet: no-op
+
+
+# ---------------------------------------------------------------------------
+# FedGroup shift detection + migration
+# ---------------------------------------------------------------------------
+class TestFedGroupMigration:
+    def _run(self, model, data, rounds=9, threshold=0.35, shift=None,
+             **cfg_kw):
+        pop = Population(ArrayClientStore(data),
+                         PopulationConfig(shift=shift))
+        cfg = _cfg(n_rounds=rounds, shift_threshold=threshold,
+                   clients_per_round=10, **cfg_kw)
+        tr = FedGroupTrainer(model, None, cfg, population=pop)
+        h = tr.run(rounds)
+        tr.close()
+        return tr, h
+
+    def test_swap_triggers_migration_within_k_rounds(self, small_model,
+                                                     small_data):
+        """After the round-3 label swap, the detector re-clusters affected
+        clients within the remaining rounds — and the migrations land in
+        the registry and the per-round records."""
+        tr, h = self._run(small_model, small_data,
+                          shift=ShiftConfig([ShiftSpec(at=3)]))
+        reg = tr.obs.registry
+        assert int(reg.get("rounds.shift_checks")) > 0
+        assert int(reg.get("rounds.migrations")) > 0
+        assert len(h.rounds) == 9
+        # the stale rows were recomputed, not reused: every client the
+        # detector migrated carries a (fresh) cached direction afterwards
+        migrated = tr._last_shifted
+        if len(migrated):
+            assert tr.population.state.has_pretrain_dir(migrated).all()
+
+    def test_no_shift_no_migration(self, small_model, small_data):
+        """Same detector, stationary data: probes run, nobody moves (the
+        threshold separates re-probe noise from a real swap)."""
+        tr, _ = self._run(small_model, small_data, rounds=6, threshold=0.35)
+        reg = tr.obs.registry
+        assert int(reg.get("rounds.shift_checks")) > 0
+        assert int(reg.get("rounds.migrations")) == 0
+
+    def test_detector_off_is_bitwise_undisturbed(self, small_model,
+                                                 small_data):
+        """shift_threshold=None (the default) must leave the streamed
+        FedGroup run byte-identical to the pre-detector behaviour — no rng
+        splits, no comm accounting, no record fields."""
+        def go(**kw):
+            pop = Population(ArrayClientStore(small_data),
+                             PopulationConfig())
+            tr = FedGroupTrainer(small_model, None, _cfg(**kw),
+                                 population=pop)
+            h = tr.run(4)
+            tr.close()
+            return tr, h
+
+        a, h_a = go()
+        b, h_b = go(shift_threshold=None)
+        assert h_a.rounds == h_b.rounds
+        _assert_tree_equal(a.group_params, b.group_params)
+        assert a.comm_params == b.comm_params
+        np.testing.assert_array_equal(np.asarray(a.key), np.asarray(b.key))
+
+    def test_check_every_throttles_probes(self, small_model, small_data):
+        dense, _ = self._run(small_model, small_data, rounds=6,
+                             shift_check_every=1)
+        sparse, _ = self._run(small_model, small_data, rounds=6,
+                              shift_check_every=3)
+        assert int(sparse.obs.registry.get("rounds.shift_checks")) < \
+            int(dense.obs.registry.get("rounds.shift_checks"))
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume bit-identity under shift (extends the PR-6 matrix)
+# ---------------------------------------------------------------------------
+SHIFT_KW = dict(shift=ShiftConfig([ShiftSpec(at=2, frac=0.6),
+                                   ShiftSpec(at=3, kind="drift",
+                                             duration=3)]),
+                prefetch=2)
+
+
+def _fresh_shifted(cls, model, data, **cfg_kw):
+    pop = Population(ArrayClientStore(data), PopulationConfig(**SHIFT_KW))
+    if cls is FedGroupTrainer:
+        cfg_kw.setdefault("shift_threshold", 0.35)
+    return cls(model, None, _cfg(**cfg_kw), population=pop)
+
+
+class TestKillAndResumeUnderShift:
+    @pytest.mark.parametrize("cls", [FedAvgTrainer, FedGroupTrainer,
+                                     IFCATrainer, FeSEMTrainer],
+                             ids=lambda c: c.framework)
+    def test_resume_is_bit_identical(self, cls, small_model, small_data,
+                                     tmp_path):
+        """A checkpoint written mid-shift (t=2, the swap round; FedGroup
+        with a live detector and cached directions) restores into a fresh
+        trainer that replays the remaining drift rounds bit-for-bit."""
+        ref = _fresh_shifted(cls, small_model, small_data)
+        h_ref = ref.run(4)
+        ref.close()
+
+        ck = dict(checkpoint_every=2, checkpoint_dir=str(tmp_path))
+        killed = _fresh_shifted(cls, small_model, small_data, **ck)
+        killed.run(3)
+        killed.close()
+        assert os.path.exists(ckpt_io.checkpoint_path(str(tmp_path), 2))
+
+        resumed = _fresh_shifted(cls, small_model, small_data, **ck)
+        assert resumed.load_checkpoint(str(tmp_path)) == 2
+        h_res = resumed.run(2)
+        resumed.close()
+
+        assert h_res.rounds == h_ref.rounds
+        _assert_tree_equal(resumed.params, ref.params)
+        if hasattr(ref, "group_params"):
+            _assert_tree_equal(resumed.group_params, ref.group_params)
+            np.testing.assert_array_equal(resumed.membership, ref.membership)
+        if getattr(ref, "local_flat", None) is not None:
+            np.testing.assert_array_equal(np.asarray(resumed.local_flat),
+                                          np.asarray(ref.local_flat))
+        assert resumed.comm_params == ref.comm_params
+        np.testing.assert_array_equal(np.asarray(resumed.key),
+                                      np.asarray(ref.key))
+
+    def test_pinned_fedgroup_detector_resume(self, small_model, small_data,
+                                             tmp_path):
+        """The detector's pinned-mode direction cache (trainer-owned lazy
+        rows, checkpointed through the generic state hooks) survives
+        kill-and-resume bit-identically too."""
+        kw = dict(shift_threshold=0.35)
+        ref = FedGroupTrainer(small_model, small_data, _cfg(**kw))
+        h_ref = ref.run(4)
+
+        ck = dict(checkpoint_every=2, checkpoint_dir=str(tmp_path), **kw)
+        killed = FedGroupTrainer(small_model, small_data, _cfg(**ck))
+        killed.run(3)
+        resumed = FedGroupTrainer(small_model, small_data, _cfg(**ck))
+        assert resumed.load_checkpoint(str(tmp_path)) == 2
+        h_res = resumed.run(2)
+
+        assert h_res.rounds == h_ref.rounds
+        _assert_tree_equal(resumed.group_params, ref.group_params)
+        np.testing.assert_array_equal(resumed.membership, ref.membership)
+        np.testing.assert_array_equal(np.asarray(resumed.key),
+                                      np.asarray(ref.key))
