@@ -1,0 +1,102 @@
+"""Benchmark: the coordinator/worker control plane's overhead and
+recovery latency.
+
+Two fleet metrics, persisted to BENCH_fleet.json (>2x regression gate in
+benchmarks/run.py, always included under --quick):
+
+  * ``coordinator_overhead``: wall ratio of training through a
+    fleet-size-1 in-process coordinator (every dispatch a routed lease:
+    transport + heartbeats + job/result messages) vs calling
+    ``engine.run()`` directly, interleaved per-segment minima — what the
+    control plane costs when nothing fails (watched "max"). The routed
+    run is bit-identical to the direct one, so this is pure plumbing
+    overhead.
+  * ``kill_recovery_s``: wall time a 2-worker fleet needs to finish a
+    round whose lease holder is hard-killed mid-dispatch — heartbeat-miss
+    detection + lease requeue + re-dispatch on the survivor (recorded,
+    not watched: it is dominated by the configured heartbeat window).
+    ``detect_window_s`` records that configured window for context.
+
+Schema + gate semantics: docs/benchmarks.md.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.bench_io import interleaved_best, record_run
+from repro.data.generators import mnist_like
+from repro.fed.engine import FedAvgTrainer, FedConfig
+from repro.fed.population import FaultConfig, FaultSpec
+from repro.launch.coordinator import Coordinator, FleetConfig
+from repro.models.paper_models import mclr
+
+
+def _cfg(**kw) -> FedConfig:
+    base = dict(clients_per_round=8, local_epochs=2, batch_size=5, lr=0.05,
+                n_groups=3, pretrain_scale=4, seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _data():
+    return mnist_like(seed=0, n_clients=40, classes_per_client=2,
+                      total_train=2000, dim=16)
+
+
+def _coordinator_overhead(model, data, reps: int):
+    """Interleaved 'run 2 more rounds' segments, routed through a
+    fleet-of-1 coordinator vs direct — both trainers keep training
+    forward on warm compiled executors, so the ratio isolates the
+    lease/transport/heartbeat plumbing."""
+    plain = FedAvgTrainer(model, data, _cfg())
+    routed_tr = FedAvgTrainer(model, data, _cfg())
+    coord = Coordinator(routed_tr, FleetConfig(n_workers=1))
+    t_plain, t_routed = interleaved_best(
+        [lambda: plain.run(2), lambda: coord.run(2)], reps=reps)
+    plain.close()
+    coord.close()
+    return t_routed / max(t_plain, 1e-9)
+
+
+def _kill_recovery(model, data, interval: float, miss: int):
+    """One hard-killed lease holder: time from the chaos round's dispatch
+    to its (re-dispatched) completion on the surviving worker."""
+    faults = FaultConfig(rounds={1: FaultSpec(worker_kill=True)})
+    tr = FedAvgTrainer(model, data, _cfg())
+    coord = Coordinator(tr, FleetConfig(
+        n_workers=2, faults=faults, heartbeat_interval=interval,
+        heartbeat_miss=miss, backoff=0.005, backoff_cap=0.02))
+    coord.run(1)                        # warm: round 0 compiles everywhere
+    t0 = time.perf_counter()
+    coord.run(1)                        # round 1: holder killed mid-lease
+    recovery_s = time.perf_counter() - t0
+    deaths = tr.obs.registry.get("fleet.worker_deaths")
+    requeues = tr.obs.registry.get("fleet.requeues")
+    coord.close()
+    assert deaths == 1 and requeues >= 1
+    return recovery_s
+
+
+def main(quick: bool = False):
+    model, data = mclr(16, 10), _data()
+    reps = 3 if quick else 6
+    interval, miss = 0.02, 15           # 0.3s detection window
+
+    overhead = _coordinator_overhead(model, data, reps)
+    recovery_s = _kill_recovery(model, data, interval, miss)
+
+    metrics = {"quick": quick,
+               "coordinator_overhead": overhead,
+               "kill_recovery_s": recovery_s,
+               "detect_window_s": interval * miss}
+    regression, details = record_run(
+        "BENCH_fleet.json", metrics,
+        watch=[("coordinator_overhead", "max")])
+    return {"coordinator_overhead": round(overhead, 3),
+            "kill_recovery_s": round(recovery_s, 3),
+            "detect_window_s": interval * miss,
+            "regression": regression, "regression_details": details}
+
+
+if __name__ == "__main__":
+    print(main())

@@ -24,6 +24,9 @@
   obs        telemetry layer: enabled-vs-disabled overhead on the fused
              round + schema self-lint of the bench's own telemetry dir
              via launch/inspect.py --check (BENCH_obs.json)
+  fleet      coordinator/worker control plane: fleet-of-1 routed-lease
+             overhead vs engine.run() + hard-killed-worker recovery
+             latency (BENCH_fleet.json)
   docs       docs freshness: module doctests + README/docs path existence
   fig5       EDC vs MADC linearity             (paper Fig. 5)
   cost       clustering-measure cost           (paper §3.3 complexity claim)
@@ -43,16 +46,17 @@ round-time ratio and the prefetch-overlap speedup; robustness the
 checkpoint overhead, quarantine efficacy and deadline saving; async the
 async-vs-sync throughput and the D=1 equivalence-mode overhead; obs the
 enabled-vs-disabled telemetry overhead on the fused round; shift the
-migration-vs-static post-swap accuracy ratio) — docs/benchmarks.md
-documents the BENCH_*.json schema and the gate semantics. Gate failures
-print a per-entry diff — which bench, crash vs watched-metric regression,
-best recorded -> measured — before the nonzero exit. ``--quick`` always
-includes the round_exec, round_block, mesh2d, population, robustness,
-shift and docs suites, even under ``--only``:
+migration-vs-static post-swap accuracy ratio; fleet the fleet-of-1
+coordinator overhead) — docs/benchmarks.md documents the BENCH_*.json
+schema and the gate semantics. Gate failures print a per-entry diff —
+which bench, crash vs watched-metric regression, best recorded ->
+measured — before the nonzero exit. ``--quick`` always includes the
+round_exec, round_block, mesh2d, population, robustness, shift, fleet
+and docs suites, even under ``--only``:
 
 ``python -m benchmarks.run --quick --only cost,table3``  — the CI perf gate
 (effectively cost,table3,round_exec,round_block,mesh2d,population,
-robustness,async,obs,shift,docs)
+robustness,async,obs,shift,fleet,docs)
 
 The harness installs a process-default telemetry (``repro.obs``), so the
 ``--json`` report carries per-bench per-stage span attribution under each
@@ -69,10 +73,10 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import (async_bench, clustering_cost, docs_check,
-                        eta_g_sweep, fig5_edc_madc, mesh2d, obs_bench,
-                        population_bench, robustness_bench, roofline,
-                        round_block, shift_bench, table1_heterogeneity,
-                        table3_frameworks)
+                        eta_g_sweep, fig5_edc_madc, fleet_bench, mesh2d,
+                        obs_bench, population_bench, robustness_bench,
+                        roofline, round_block, shift_bench,
+                        table1_heterogeneity, table3_frameworks)
 from repro.obs import telemetry as obs_telemetry
 
 BENCHES = {
@@ -86,6 +90,7 @@ BENCHES = {
     "async": async_bench.main,
     "obs": obs_bench.main,
     "shift": shift_bench.main,
+    "fleet": fleet_bench.main,
     "docs": docs_check.main,
     "fig5": fig5_edc_madc.main,
     "cost": clustering_cost.main,
@@ -110,11 +115,11 @@ def main(argv=None) -> int:
         # the CI gate must always exercise the round-executor, round-block,
         # 2-D mesh, population (streamed cohort), robustness (faults /
         # checkpoint / deadline), async (staleness runtime), obs
-        # (telemetry overhead) and shift (migration efficacy) suites +
-        # the docs check
+        # (telemetry overhead), shift (migration efficacy) and fleet
+        # (coordinator overhead / kill recovery) suites + the docs check
         for required in ("round_exec", "round_block", "mesh2d",
                          "population", "robustness", "async", "obs",
-                         "shift", "docs"):
+                         "shift", "fleet", "docs"):
             if required not in names:
                 names.append(required)
     # process-default telemetry: trainers/populations the benches build

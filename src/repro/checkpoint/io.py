@@ -24,6 +24,8 @@ from __future__ import annotations
 import json
 import os
 import re
+import zipfile
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -37,26 +39,78 @@ _CKPT_RE = re.compile(r"ckpt_(\d+)\.npz$")
 # the metadata; v3: telemetry — the unified ``repro.obs`` metrics-registry
 # snapshot rides the metadata as ``"obs"``, replacing the scattered
 # ``async_stats`` dict, so every degradation counter survives
-# kill-and-resume through one surface). Stored inside the ``__meta__``
+# kill-and-resume through one surface; v4: integrity + fleet — per-array
+# CRC32 checksums ride the metadata as ``"__crc__"`` and the coordinator's
+# control-plane snapshot as ``"fleet"``). Stored inside the ``__meta__``
 # JSON; archives written before versioning existed read back as v1.
 # Loaders check the version FIRST, so an old file fails with a clear
 # "checkpoint format version X, expected Y" error instead of a raw
-# key/shape-mismatch traceback.
-CKPT_FORMAT_VERSION = 3
+# key/shape-mismatch traceback. Versions back to ``_MIN_READ_VERSION``
+# still load (a pre-checksum v3 archive simply skips CRC verification —
+# both additions are metadata-only, the array schema is unchanged).
+CKPT_FORMAT_VERSION = 4
+_MIN_READ_VERSION = 3
 _FORMAT_KEY = "__ckpt_format__"
+_CRC_KEY = "__crc__"
 
 
 class CheckpointFormatError(ValueError):
-    """Archive was written by a different checkpoint format version."""
+    """Archive was written by an incompatible checkpoint format version."""
+
+
+class CheckpointCorruptError(ValueError):
+    """Archive failed an integrity check (torn write / bit flip): a stored
+    array's CRC32 does not match the checksum recorded at save time, or
+    the zip container itself is damaged."""
 
 
 def _check_format(path: str, meta: dict):
     version = int(meta.get(_FORMAT_KEY, 1))
-    if version != CKPT_FORMAT_VERSION:
+    if not _MIN_READ_VERSION <= version <= CKPT_FORMAT_VERSION:
         raise CheckpointFormatError(
             f"{path}: checkpoint format version {version}, expected "
-            f"{CKPT_FORMAT_VERSION} — re-create the checkpoint with this "
-            f"version of the code (the archive schema changed)")
+            f"{CKPT_FORMAT_VERSION} (>= {_MIN_READ_VERSION} accepted) — "
+            f"re-create the checkpoint with this version of the code (the "
+            f"archive schema changed)")
+
+
+def _crc(arr: np.ndarray) -> int:
+    """CRC32 of an array's C-order bytes (dtype/shape are covered by the
+    loader's own strict template checks)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def _load_npz(path: str):
+    """``np.load`` with container damage surfaced as corruption, not a raw
+    zipfile traceback."""
+    try:
+        return np.load(path, allow_pickle=False)
+    except (zipfile.BadZipFile, EOFError) as e:
+        raise CheckpointCorruptError(
+            f"{path}: archive container is damaged ({e}) — torn write or "
+            f"truncation; restore from an earlier checkpoint") from e
+
+
+def _read_array(path: str, data, key: str) -> np.ndarray:
+    try:
+        return data[key]
+    except (zipfile.BadZipFile, EOFError, zlib.error) as e:
+        raise CheckpointCorruptError(
+            f"{path}: stored array {key!r} is unreadable ({e}) — the "
+            f"archive is corrupt; restore from an earlier checkpoint") from e
+
+
+def _verify_crc(path: str, crcs, key: str, arr: np.ndarray):
+    """Check one stored array against the save-time checksum table (a
+    pre-v4 archive has no table — verification is skipped)."""
+    if crcs is None:
+        return
+    stored = crcs.get(key)
+    if stored is not None and _crc(arr) != int(stored):
+        raise CheckpointCorruptError(
+            f"{path}: stored array {key!r} failed its CRC32 integrity "
+            f"check — the archive is corrupt (bit flip or partial "
+            f"overwrite); restore from an earlier checkpoint")
 
 
 def _path_str(path) -> str:
@@ -84,6 +138,10 @@ def save_pytree(path: str, tree, metadata: dict | None = None):
         # suffix, so `path` is exactly the file on disk
         meta = dict(metadata or {})
         meta[_FORMAT_KEY] = CKPT_FORMAT_VERSION
+        # per-array integrity checksums (format v4): verified on load, so
+        # a bit-flipped or partially-overwritten archive raises
+        # CheckpointCorruptError instead of silently restoring garbage
+        meta[_CRC_KEY] = {k: _crc(v) for k, v in flat.items()}
         with open(tmp, "wb") as f:
             np.savez(f, __meta__=json.dumps(meta), **flat)
             f.flush()
@@ -103,9 +161,12 @@ def load_pytree(path: str, template):
     checked FIRST — an archive from another version raises
     ``CheckpointFormatError`` instead of a key/shape mismatch.
     """
-    data = np.load(path, allow_pickle=False)
+    data = _load_npz(path)
+    crcs = None
     if "__meta__" in data.files:
-        _check_format(path, json.loads(str(data["__meta__"])))
+        meta = json.loads(str(data["__meta__"]))
+        _check_format(path, meta)
+        crcs = meta.get(_CRC_KEY)    # absent in pre-v4 archives
     leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     tmpl_keys = {_path_str(kp) for kp, _ in leaves_paths}
     file_keys = set(data.files) - {"__meta__"}
@@ -117,7 +178,8 @@ def load_pytree(path: str, template):
     leaves = []
     for kp, tmpl in leaves_paths:
         key = _path_str(kp)
-        arr = data[key]
+        arr = _read_array(path, data, key)
+        _verify_crc(path, crcs, key, arr)
         if arr.shape != tmpl.shape:
             raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {tmpl.shape}")
         # a numpy template leaf stays host-side (jnp would truncate int64
@@ -134,10 +196,11 @@ def load_metadata(path: str) -> dict:
     format-version mismatch (e.g. a pre-versioning v1 file) — the engine
     calls this before any template matching, so old checkpoints fail with
     the clear version error, never a raw key/shape traceback."""
-    data = np.load(path, allow_pickle=False)
+    data = _load_npz(path)
     meta = json.loads(str(data["__meta__"]))
     _check_format(path, meta)
     meta.pop(_FORMAT_KEY, None)
+    meta.pop(_CRC_KEY, None)        # internal, like the format key
     return meta
 
 
@@ -145,7 +208,7 @@ def saved_array_specs(path: str) -> dict:
     """``{key: (shape, dtype)}`` of every stored array — enough to build a
     ``load_pytree`` template for state whose size is only known at save
     time (lazy state-table rows, scheduler arrival queues)."""
-    data = np.load(path, allow_pickle=False)
+    data = _load_npz(path)
     return {k: (data[k].shape, data[k].dtype)
             for k in data.files if k != "__meta__"}
 
@@ -153,6 +216,32 @@ def saved_array_specs(path: str) -> dict:
 def checkpoint_path(directory: str, t: int) -> str:
     """Canonical name of the round-``t`` checkpoint in ``directory``."""
     return os.path.join(directory, f"ckpt_{t:08d}.npz")
+
+
+def prune_checkpoints(directory: str, keep: int) -> list:
+    """Delete all but the newest ``keep`` ``ckpt_<t>.npz`` archives in
+    ``directory`` (by round number); returns the removed paths. Intended
+    to run *after* a successful atomic write — the newest archive always
+    survives, so a crash mid-prune can only leave extra (older, intact)
+    checkpoints behind, never fewer than ``keep``. Non-checkpoint files
+    are untouched; ``keep <= 0`` is a no-op (keep-all)."""
+    if keep <= 0:
+        return []
+    try:
+        names = os.listdir(directory)
+    except OSError:
+        return []
+    found = sorted((int(m.group(1)), name) for name in names
+                   if (m := _CKPT_RE.fullmatch(name)))
+    removed = []
+    for _, name in found[:-keep]:
+        path = os.path.join(directory, name)
+        try:
+            os.remove(path)
+            removed.append(path)
+        except OSError:
+            pass    # raced with another pruner / already gone — harmless
+    return removed
 
 
 def latest_checkpoint(directory: str) -> str | None:

@@ -411,6 +411,7 @@ class FedGroupTrainer(GroupedTrainer):
         self.params = out.global_params
 
         acc = self._round_eval(t)
+        self._fold_alive = len(idx)
         m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy),
                          int(out.n_quarantined))
         self.history.add(m)

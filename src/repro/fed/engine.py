@@ -67,11 +67,16 @@ import numpy as np
 
 from repro.data.federated import FederatedData
 from repro.fed import client as client_lib
+from repro.fed import leases as leases_lib
 from repro.fed import parallel as parallel_lib
 from repro.fed import rounds as rounds_lib
 from repro.fed import server as server_lib
 from repro.models.paper_models import ModelSpec
 from repro.obs import telemetry as obs_lib
+
+# the async runtime's lease record — shared with the coordinator/worker
+# control plane (fed.leases generalizes what PR 7 built here)
+_AsyncLease = leases_lib.Lease
 
 
 @dataclass
@@ -108,6 +113,10 @@ class FedConfig:
     # same-config trainer resumes bit-identically via load_checkpoint()
     checkpoint_every: int = 0
     checkpoint_dir: str | None = None
+    # retention: after a successful cadence write keep only the newest
+    # `checkpoint_keep` ckpt_<t>.npz archives (0 = keep all); pruning is
+    # atomic-after-write, so the latest checkpoint is never at risk
+    checkpoint_keep: int = 0
     # asynchronous runtime (0 = synchronous): up to `async_depth` cohort
     # dispatches in flight, folded FIFO into the live group state with
     # FedAsync staleness weights alpha * (staleness + 1)^(-beta) — the
@@ -199,22 +208,6 @@ class History:
         return None
 
 
-@dataclass
-class _AsyncLease:
-    """One in-flight async dispatch: the staged inputs (kept so an expired
-    lease can be re-dispatched against the then-current state), the
-    per-group version clock snapshot taken at dispatch (staleness at fold =
-    clock now − snapshot), the device result/metric references the loop
-    polls for readiness, the monotonic expiry deadline, and how many leases
-    for this cohort already expired (drives the requeue backoff)."""
-    staged: tuple
-    version: np.ndarray
-    result: object
-    metrics: tuple | None
-    deadline: float
-    attempts: int = 0
-
-
 class FedAvgTrainer:
     """FedAvg (mu=0) / FedProx (mu>0) with a consensus global model."""
 
@@ -262,6 +255,8 @@ class FedAvgTrainer:
                                     # restored Population.stats totals
         self._last_staleness = None  # last async fold's max staleness /
         self._last_weights = None    # per-group weights (round record)
+        self._fold_alive = None     # alive cohort size of the fold being
+                                    # recorded (rounds.empty_folds detector)
         # client axis sharded over "data" on multi-device (None = plain
         # jit); REPRO_MODEL_AXIS>1 auto-builds the 2-D (data, model) mesh
         self.mesh = parallel_lib.default_fed_mesh() if mesh is None else mesh
@@ -301,6 +296,13 @@ class FedAvgTrainer:
             reg.inc("rounds.evals")
         if m.quarantined:
             reg.inc("rounds.quarantined", m.quarantined)
+            if self._fold_alive is not None \
+                    and m.quarantined >= self._fold_alive:
+                # every alive cohort delta was screened: the in-program
+                # zero-weight fold left the group params untouched (an
+                # identity passthrough, never a 0/0) — count it
+                reg.inc("rounds.empty_folds")
+        self._fold_alive = None
         if self.obs.recording:
             self.obs.round_record(self._round_record(m))
 
@@ -459,6 +461,7 @@ class FedAvgTrainer:
         for b in range(len(staged)):
             acc = (int(correct[b]) / max(int(total[b]), 1)
                    if do_eval[b] else float("nan"))
+            self._fold_alive = int(staged[b][2].sum())
             self.history.add(RoundMetrics(t0 + b, acc, float(mean_loss[b]),
                                           float(disc[b]), int(n_quar[b])))
 
@@ -578,6 +581,7 @@ class FedAvgTrainer:
             jnp.zeros(len(idx), jnp.int32), x, y, n, keys)
         self.params = out.global_params
         acc = self._round_eval(t)
+        self._fold_alive = len(idx)
         m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy),
                          int(out.n_quarantined))
         self.history.add(m)
@@ -779,8 +783,11 @@ class FedAvgTrainer:
         carry = self._carry_in() if pinned else None
         exec_ = self._async_executor() if pinned else self._round_executor()
         fold = self._async_fold()
+        policy = leases_lib.RetryPolicy(
+            cfg.async_lease_timeout, cfg.async_max_retries,
+            cfg.async_backoff, cfg.async_backoff_cap)
         pending = []                 # in-flight leases, FIFO fold order
-        requeued = []                # (ready_at, staged, attempts)
+        requeued = leases_lib.RequeueBuffer()  # expired, backing off
         t_stage = t0                 # cohorts staged so far
         t_fold = t0                  # rounds folded so far
 
@@ -803,10 +810,9 @@ class FedAvgTrainer:
             nonlocal t_stage, carry
             while len(pending) < depth:
                 now = time.monotonic()
-                ready = next((i for i, r in enumerate(requeued)
-                              if r[0] <= now), None)
+                ready = requeued.pop_ready(now)
                 if ready is not None:
-                    _, staged, attempts = requeued.pop(ready)
+                    staged, attempts = ready
                     dispatch(staged, attempts)
                 elif fresh and t_stage < total:
                     cold, staged = self._stage_async(t_stage)
@@ -826,7 +832,7 @@ class FedAvgTrainer:
                 elif requeued and not pending:
                     # nothing in flight and every lease is backing off:
                     # sleep to the earliest retry instead of spinning
-                    time.sleep(max(0.0, min(r[0] for r in requeued)
+                    time.sleep(max(0.0, requeued.earliest()
                                    - time.monotonic()))
                 else:
                     break
@@ -851,7 +857,9 @@ class FedAvgTrainer:
                     self._carry_refs(carry)
                     mean_loss, disc, n_quar, mem = (np.asarray(v)
                                                     for v in lease.metrics)
-                    occupied = np.unique(mem[np.asarray(alive_d) > 0])
+                    alive_h = np.asarray(alive_d)
+                    self._fold_alive = int(alive_h.sum())
+                    occupied = np.unique(mem[alive_h > 0])
                     if self._should_eval(t):
                         with self.obs.span("eval", t=t):
                             acc = self._fused_eval_acc(
@@ -865,6 +873,7 @@ class FedAvgTrainer:
                                         out.group_params, out.global_params,
                                         jnp.asarray(w))
                     self._async_adopt(out, lease.staged[0], groups, glob)
+                    self._fold_alive = int(len(lease.staged[0]))
                     occupied = np.unique(np.asarray(out.membership))
                     mean_loss, disc, n_quar = (out.mean_loss,
                                                out.discrepancy,
@@ -886,20 +895,10 @@ class FedAvgTrainer:
             st["lease_expiries"] += 1
             if pop is not None:
                 pop.stats["lease_expiries"] += 1
-            attempts = lease.attempts + 1
-            if attempts > cfg.async_max_retries:
-                raise RuntimeError(
-                    f"async cohort lease expired {attempts} times "
-                    f"(async_lease_timeout={cfg.async_lease_timeout}s, "
-                    f"async_max_retries={cfg.async_max_retries}) — the "
-                    f"cohort is unrecoverable, not merely slow")
+            requeued.push(lease, policy, time.monotonic())
             st["requeues"] += 1
             if pop is not None:
                 pop.stats["requeues"] += 1
-            delay = min(cfg.async_backoff * (2.0 ** lease.attempts),
-                        cfg.async_backoff_cap)
-            requeued.append((time.monotonic() + delay, lease.staged,
-                             attempts))
             return False
 
         while t_fold < total:
@@ -1003,10 +1002,25 @@ class FedAvgTrainer:
                     # counters, pop.* robustness counters, rounds.* series
                     # — one consistent mid-run capture (format v3)
                     "obs": self.obs.registry.snapshot(),
+                    # fleet metadata (ckpt format v4): the coordinator's
+                    # control-plane snapshot when a launch.Coordinator owns
+                    # this trainer, None on single-process runs
+                    "fleet": self._fleet_meta(),
                     "population": pop_meta}
             ckpt_io.save_pytree(path, {"model": self._ckpt_model_tree(),
                                        "state": state}, meta)
+        if self.cfg.checkpoint_keep > 0 and self.cfg.checkpoint_dir:
+            # retention AFTER the successful atomic write: the archive just
+            # written is the newest, so it always survives the prune
+            ckpt_io.prune_checkpoints(self.cfg.checkpoint_dir,
+                                      self.cfg.checkpoint_keep)
         return path
+
+    def _fleet_meta(self):
+        """Checkpoint meta hook: the owning coordinator's control-plane
+        snapshot (``launch.coordinator`` overrides this on its trainer);
+        None on single-process runs."""
+        return None
 
     def load_checkpoint(self, path_or_dir: str) -> int:
         """Restore a ``save_checkpoint`` snapshot into this trainer (fresh,

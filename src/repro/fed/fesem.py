@@ -152,6 +152,7 @@ class FeSEMTrainer(GroupedTrainer):
             self.local_flat = out.assign_state["local_flat"]
         self._adopt_membership(idx, out.membership)
         acc = self._round_eval(t)
+        self._fold_alive = len(idx)
         m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy),
                          int(out.n_quarantined))
         self.history.add(m)

@@ -81,6 +81,7 @@ class IFCATrainer(GroupedTrainer):
         # are counted into the telemetry registry on the way through
         self._adopt_membership(idx, out.membership)
         acc = self._round_eval(t)
+        self._fold_alive = len(idx)
         m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy),
                          int(out.n_quarantined))
         self.history.add(m)

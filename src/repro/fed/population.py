@@ -264,6 +264,25 @@ class FaultSpec:
     writer_crash    kill the async state-table writer thread mid-write this
                     round (the next drain surfaces it, see
                     ``_AsyncStateWriter.inject_thread_crash``).
+
+    The ``worker_*``/``msg_*``/``heartbeat_delay`` fields are *fleet*
+    faults — process-level chaos consumed by ``launch.coordinator`` (the
+    population itself ignores them):
+
+    worker_kill     SIGKILL (process transport) or hard-stop (in-process
+                    transport) one worker while it holds this round's
+                    lease; the coordinator detects the death via missed
+                    heartbeats, requeues the lease, and re-dispatches.
+    heartbeat_delay suppress a worker's heartbeats for this many seconds
+                    starting at this round — long enough and the
+                    coordinator declares the worker dead (a late
+                    heartbeat resurrects it).
+    msg_drop        drop this round's first result message in transit
+                    (the lease times out and requeues).
+    msg_dup         deliver this round's result message twice (the stale
+                    duplicate must be ignored by job id).
+    msg_reorder     hold this round's result back until another message
+                    passes it (delivery-order chaos).
     """
     kill: int = 0
     straggle: float = 0.0
@@ -271,6 +290,11 @@ class FaultSpec:
     corrupt_mode: str = "nan"
     corrupt_scale: float = 64.0
     writer_crash: bool = False
+    worker_kill: bool = False
+    heartbeat_delay: float = 0.0
+    msg_drop: bool = False
+    msg_dup: bool = False
+    msg_reorder: bool = False
 
 
 @dataclass

@@ -229,6 +229,7 @@ class LCFLTrainer(GroupedTrainer):
         self.group_params = out.group_params
         self._adopt_membership(idx, out.membership)
         acc = self._round_eval(t)
+        self._fold_alive = len(idx)
         m = RoundMetrics(t, acc, float(out.mean_loss), float(out.discrepancy),
                          int(out.n_quarantined))
         self.history.add(m)

@@ -110,11 +110,16 @@ def render(run_dir: str, data: dict, top_k: int = 5,
                 f"{a['total_s'] / total:>6.1%}")
     counters = (summary or {}).get("counters") or {}
     # pop.* are all degradation counters by construction (_STATS_ZERO);
-    # of async.* only expiries/requeues and quarantines signal trouble
+    # of async.* only expiries/requeues and quarantines signal trouble;
+    # of fleet.* everything except normal throughput/liveness traffic
+    # (jobs, results, heartbeats, joins, workers gauge) is a fault signal
+    _FLEET_OK = ("fleet.jobs", "fleet.results", "fleet.heartbeats",
+                 "fleet.joins", "fleet.workers")
     degraded = {k: v for k, v in counters.items()
                 if (k.startswith("pop.")
+                    or (k.startswith("fleet.") and k not in _FLEET_OK)
                     or k in ("async.lease_expiries", "async.requeues",
-                             "rounds.quarantined"))
+                             "rounds.quarantined", "rounds.empty_folds"))
                 and not isinstance(v, dict) and v}
     lines += ["", "degradation counters:"]
     if degraded:

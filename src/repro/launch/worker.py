@@ -1,0 +1,228 @@
+"""Stateless fleet workers: the compute side of the coordinator/worker
+control plane.
+
+A worker owns **no training state** — the coordinator holds the m-stacked
+group params, the ``ClientStateTable``, membership, both rng streams and
+the checkpoints. A worker holds only *executors* (the compiled fused round
+programs) and runs whatever job message arrives: ``payload = (fn_name,
+args)``, looked up in its function table, executed, result sent back. That
+statelessness is what makes recovery trivial — a job is a pure function of
+its arguments, so a re-dispatched lease (after a SIGKILL, a dropped
+message, an expired lease) produces the bit-identical result on any other
+worker.
+
+Two flavors:
+
+* :class:`InProcWorker` — a thread sharing the coordinator's process and
+  its compiled executors (the coordinator passes its own executor table);
+  arguments arrive by reference. ``kill()`` hard-stops it mid-queue
+  without a reply — the observable signature of a process death, used by
+  the chaos path.
+* :func:`worker_entry` — the spawned-process body (``ProcTransport``):
+  builds its own trainer replica from a :class:`WorkerSpec` (the
+  newcomer's "cold start" — executors compile locally on the first job),
+  then serves jobs with numpy-pytree payloads.
+
+Both beat a heartbeat every ``heartbeat_interval`` seconds from a side
+thread, and announce themselves with a ``join`` message once ready.
+"""
+from __future__ import annotations
+
+import importlib
+import threading
+import traceback
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.launch.transport import Message
+
+
+# ---------------------------------------------------------------------------
+# building a worker-side trainer (process mode)
+# ---------------------------------------------------------------------------
+@dataclass
+class WorkerSpec:
+    """How a process worker builds its trainer replica: ``builder`` is a
+    ``"module:function"`` import string; the function receives ``kwargs``
+    and returns a constructed (untrained) trainer. The builder must be
+    importable from the spawned interpreter — a module under ``src/``
+    (spawn propagates ``sys.path``), never a test-file local."""
+    builder: str
+    kwargs: dict = field(default_factory=dict)
+
+
+def resolve_builder(spec: WorkerSpec):
+    mod_name, _, fn_name = spec.builder.partition(":")
+    if not fn_name:
+        raise ValueError(
+            f"WorkerSpec.builder must be 'module:function', got "
+            f"{spec.builder!r}")
+    return getattr(importlib.import_module(mod_name), fn_name)
+
+
+def synthetic_builder(framework: str = "fedavg", n_clients: int = 40,
+                      dim: int = 16, seed: int = 0, **cfg_kw):
+    """Reference builder for tests and benchmarks: an mnist-like pinned
+    trainer of any of the four frameworks. Deterministic in its arguments,
+    so every worker process builds the identical replica."""
+    from repro.core.fedgroup import FedGroupTrainer
+    from repro.data.generators import mnist_like
+    from repro.fed.engine import FedAvgTrainer, FedConfig
+    from repro.fed.fesem import FeSEMTrainer
+    from repro.fed.ifca import IFCATrainer
+    from repro.models.paper_models import mclr
+
+    classes = {"fedavg": FedAvgTrainer, "fedgroup": FedGroupTrainer,
+               "ifca": IFCATrainer, "fesem": FeSEMTrainer}
+    data = mnist_like(seed=seed, n_clients=n_clients, classes_per_client=2,
+                      total_train=50 * n_clients, dim=dim)
+    base = dict(n_rounds=4, clients_per_round=8, local_epochs=2,
+                batch_size=5, lr=0.05, n_groups=3, pretrain_scale=4,
+                seed=seed)
+    base.update(cfg_kw)
+    model = mclr(dim, 10)
+    return classes[framework](model, data, FedConfig(**base))
+
+
+def worker_fn_table(trainer) -> dict:
+    """The jobs a worker serves: the trainer's compiled train dispatches.
+    Evaluation stays on the coordinator (server-side metrics)."""
+    return {"round": trainer._round_executor(),
+            "block": trainer._block_executor(),
+            "async": trainer._async_executor()}
+
+
+def _to_numpy(tree):
+    """Host-side copy of a pytree (device arrays -> numpy) for pickling
+    across the process boundary."""
+    import jax
+    return jax.tree_util.tree_map(lambda a: np.asarray(a), tree)
+
+
+# ---------------------------------------------------------------------------
+# in-process (thread) worker
+# ---------------------------------------------------------------------------
+class InProcWorker:
+    """A thread worker over an :class:`InProcEndpoint`. The function table
+    is shared with the coordinator's trainer, so a routed dispatch runs
+    the *same* compiled executor on the *same* arrays as a single-process
+    run — the fleet-size-1 bit-identity guarantee."""
+
+    def __init__(self, name: str, endpoint, table: dict,
+                 heartbeat_interval: float = 0.05):
+        self.name = name
+        self._ep = endpoint
+        self._table = table
+        self._interval = heartbeat_interval
+        self._dead = threading.Event()     # hard-stop (chaos kill)
+        self._thread = None
+        self._beat_thread = None
+
+    def start(self):
+        self._thread = threading.Thread(
+            target=self._run, name=f"fleet-worker-{self.name}", daemon=True)
+        self._beat_thread = threading.Thread(
+            target=self._beat, name=f"fleet-beat-{self.name}", daemon=True)
+        self._thread.start()
+        self._beat_thread.start()
+        self._ep.send(Message("join", self.name))
+
+    def kill(self):
+        """Hard-stop: no more job replies, no more heartbeats — the
+        in-process equivalent of SIGKILL (chaos ``worker_kill``). A job
+        already in the inbox is lost, exactly like a process death
+        mid-dispatch."""
+        self._dead.set()
+
+    def stop(self):
+        """Graceful leave: the worker drains its inbox up to the stop
+        marker and announces departure."""
+        self._ep.send(Message("leave", self.name))
+        self._dead.set()
+
+    def _beat(self):
+        while not self._dead.is_set():
+            self._ep.send(Message("heartbeat", self.name))
+            self._dead.wait(self._interval)
+
+    def _run(self):
+        while not self._dead.is_set():
+            msg = self._ep.recv(timeout=0.02)
+            if msg is None or self._dead.is_set():
+                continue
+            if msg.kind == "stop":
+                self._ep.send(Message("leave", self.name))
+                self._dead.set()         # stops the beat thread too
+                break
+            if msg.kind != "job":
+                continue
+            fn_name, args = msg.payload
+            try:
+                out = self._table[fn_name](*args)
+            except Exception:
+                self._ep.send(Message("error", self.name, msg.job_id,
+                                      traceback.format_exc()))
+                continue
+            if self._dead.is_set():
+                continue                 # killed mid-dispatch: result lost
+            self._ep.send(Message("result", self.name, msg.job_id, out))
+
+
+# ---------------------------------------------------------------------------
+# spawned-process worker body
+# ---------------------------------------------------------------------------
+def worker_entry(conn, name: str, spec: WorkerSpec,
+                 heartbeat_interval: float = 0.05):
+    """Process-worker main: build the trainer replica from ``spec`` (the
+    newcomer cold start — jit compilation happens lazily on the first
+    job), join the fleet, then serve jobs until ``stop`` or pipe close.
+    Payloads are numpy pytrees both ways."""
+    from repro.launch.transport import PipeEndpoint
+
+    ep = PipeEndpoint(name, conn)
+    try:
+        trainer = resolve_builder(spec)(**spec.kwargs)
+        table = worker_fn_table(trainer)
+    except Exception:
+        try:
+            ep.send(Message("error", name, -1, traceback.format_exc()))
+        finally:
+            ep.close()
+        return
+    stop = threading.Event()
+
+    def beat():
+        while not stop.is_set():
+            try:
+                ep.send(Message("heartbeat", name))
+            except (BrokenPipeError, OSError):
+                return
+            stop.wait(heartbeat_interval)
+
+    threading.Thread(target=beat, daemon=True).start()
+    ep.send(Message("join", name))
+    try:
+        while True:
+            try:
+                msg = ep.recv(timeout=0.05)
+            except (EOFError, OSError):
+                break                    # coordinator went away
+            if msg is None:
+                continue
+            if msg.kind == "stop":
+                ep.send(Message("leave", name))
+                break
+            if msg.kind != "job":
+                continue
+            fn_name, args = msg.payload
+            try:
+                out = _to_numpy(table[fn_name](*args))
+            except Exception:
+                ep.send(Message("error", name, msg.job_id,
+                                traceback.format_exc()))
+                continue
+            ep.send(Message("result", name, msg.job_id, out))
+    finally:
+        stop.set()
+        ep.close()

@@ -55,7 +55,7 @@ NULL_SPAN = _NullSpan()
 
 #: canonical span kinds instrumented across the runtime (docs/observability.md)
 SPAN_KINDS = ("stage", "h2d", "dispatch", "fold", "state-write", "eval",
-              "checkpoint")
+              "checkpoint", "lease", "heartbeat")
 
 
 class SpanRecord:

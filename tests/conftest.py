@@ -27,6 +27,24 @@ def _no_default_telemetry_leak():
         f"(was {before!r}) — wrap set_default() in try/finally")
 
 
+@pytest.fixture(autouse=True)
+def _fleet_deadlock_backstop(request):
+    """Deadlock backstop for ``fleet``-marked tests: a spawned worker and
+    the coordinator's message pump can — under a real bug — wait on each
+    other forever, and a hung CI job with no traceback is undebuggable.
+    ``faulthandler`` dumps every thread's stack after 5 minutes (without
+    killing the run, so the test still fails on its own timeout/assert)."""
+    if request.node.get_closest_marker("fleet") is None:
+        yield
+        return
+    import faulthandler
+    faulthandler.dump_traceback_later(300.0, exit=False)
+    try:
+        yield
+    finally:
+        faulthandler.cancel_dump_traceback_later()
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)
